@@ -1,0 +1,58 @@
+"""Kernel-adjusted memory term.
+
+The dry-run lowers the pure-jnp flash/SSD formulations (Pallas cannot lower
+for the CPU backend), so the measured HBM-traffic term includes score-sized
+intermediates that the TPU Pallas kernels keep in VMEM.  This report
+subtracts the traffic of ops whose einsum signatures identify them as
+kernel-interior (conservative: fused elementwise neighbors are NOT
+subtracted), giving the memory term the Pallas execution path would see.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.roofline.analysis import HBM_BW
+
+ART = Path(__file__).resolve().parent / "artifacts"
+
+# einsum label tails that live inside the Pallas kernels' VMEM tiles
+KERNEL_INTERIOR = (
+    "bshgd,bkhd->bshgk",   # flash scores (fwd + bwd dp)
+    "bshgk,bkhd->bshgd",   # flash AV / dq
+    "bshgk,bshgd->bkhd",   # flash dk/dv
+    "bhgd,bshd->bhgs",     # decode scores
+    "bhgs,bshd->bhgd",     # decode AV
+    "bin,bjn->bij",        # SSD C.B^T
+    "bhij,bjhp->bihp",     # SSD intra-chunk apply
+    "bhq,bqh,bqn,bqhp->bhpn",   # SSD chunk state
+    "bqn,bhq,bhpn->bqhp",  # SSD inter-chunk apply
+)
+
+
+def adjusted(artifact: dict):
+    scopes = artifact["cost"].get("bytes_by_scope") or {}
+    interior = sum(v for k, v in scopes.items()
+                   if any(sig in k for sig in KERNEL_INTERIOR))
+    raw = artifact["cost"]["bytes_per_device"]
+    adj = raw - interior
+    return raw / HBM_BW, adj / HBM_BW, interior / max(raw, 1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="perf/pod16x16")
+    args = ap.parse_args(argv)
+    print(f"{'cell':<58}{'mem_jnp_s':>10}{'mem_kern_s':>11}{'interior%':>10}")
+    for f in sorted((ART / args.dir).glob("*.json")):
+        a = json.loads(f.read_text())
+        if a.get("status") != "ok":
+            continue
+        raw_s, adj_s, frac = adjusted(a)
+        name = f"{a['arch']}/{a['shape']}/{a.get('tag', '')}"
+        print(f"{name:<58}{raw_s:>10.3f}{adj_s:>11.3f}{frac*100:>9.1f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""End-to-end driver example: pre-train a ~smolLM-family model for a few
+hundred steps through the workflow runtime (checkpointed, restartable).
+
+    PYTHONPATH=src python examples/train_smollm.py            # ~100M-ish
+    PYTHONPATH=src python examples/train_smollm.py --tiny     # CI-sized
+
+The full run uses a width-reduced SmolLM (not the 360M flagship — this
+container is a single CPU) trained on the deterministic synthetic corpus;
+loss must drop monotonically-ish over the run.
+"""
+import argparse
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--steps", type=int, default=0)
+    args = ap.parse_args()
+    if args.tiny:
+        steps = args.steps or 40
+        argv = ["--arch", "smollm-360m", "--reduced", "--steps", str(steps),
+                "--segment", "10", "--batch", "8", "--seq", "128",
+                "--ckpt-dir", "/tmp/repro_smollm_tiny"]
+    else:
+        steps = args.steps or 200
+        argv = ["--arch", "smollm-360m", "--reduced", "--steps", str(steps),
+                "--segment", "20", "--batch", "16", "--seq", "256",
+                "--ckpt-dir", "/tmp/repro_smollm"]
+    losses = train_main(argv)
+    assert losses[-1] < losses[0], "loss did not improve"
+    print(f"[example] trained {steps} steps: "
+          f"{losses[0]:.3f} -> {losses[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""repro.core — RPEX-JAX: Parsl/DFK + RADICAL-Pilot integration, TPU-native.
+
+Public API:
+    DataFlowKernel, python_app, spmd_app, bash_app   (Parsl side)
+    RPEXExecutor, PilotDescription                   (the integration)
+    PilotManager, TaskManager, Agent, SlotScheduler  (RP side)
+"""
+from .agent import Agent
+from .apps import bash_app, python_app, spmd_app
+from .dfk import DataFlowKernel, current_dfk
+from .executors import Executor, ParslTask, ThreadPoolExecutor
+from .futures import (AppFuture, ResourceSpec, TaskRecord, TaskState,
+                      new_uid)
+from .pilot import Pilot, PilotDescription, PilotManager, TaskManager
+from .rpex import RPEXExecutor
+from .scheduler import SlotScheduler
+from .spmd_executor import SPMDFunctionExecutor
+from .store import StateStore
+from .translator import bind_future, detect_kind, translate
+
+__all__ = [
+    "Agent", "AppFuture", "DataFlowKernel", "Executor", "ParslTask",
+    "Pilot", "PilotDescription", "PilotManager", "RPEXExecutor",
+    "ResourceSpec", "SPMDFunctionExecutor", "SlotScheduler", "StateStore",
+    "TaskManager", "TaskRecord", "TaskState", "ThreadPoolExecutor",
+    "bash_app", "bind_future", "current_dfk", "detect_kind", "new_uid",
+    "python_app", "spmd_app", "translate",
+]

@@ -1,0 +1,244 @@
+"""Agent — the RP Agent analog: scheduler loop + dispatcher on the pilot.
+
+A single scheduling thread pulls translated tasks from the inbox into a
+priority/FIFO wait queue, allocates slot blocks (with bounded backfill:
+later small tasks may run ahead of a blocked large task, never starving it),
+and hands each scheduled task to a worker thread (the MPI-Master/Worker
+analog) that drives the SPMD executor.  A separate monitor thread implements
+straggler mitigation (soft-deadline replicas) and retry-on-failure.
+
+All state transitions are timestamped through the StateStore so the
+Fig.6-style utilization breakdown (Scheduled/Launching/Running/Idle) can be
+integrated offline.
+"""
+from __future__ import annotations
+
+import heapq
+import queue
+import threading
+import time
+import traceback
+from typing import Callable, Dict, List, Optional, Tuple
+
+from .futures import TERMINAL, ResourceSpec, TaskRecord, TaskState, new_uid
+from .scheduler import SlotScheduler
+from .spmd_executor import SPMDFunctionExecutor
+from .store import StateStore
+
+
+class Agent:
+    def __init__(self, scheduler: SlotScheduler,
+                 executor: SPMDFunctionExecutor,
+                 store: Optional[StateStore] = None,
+                 max_workers: int = 32,
+                 backfill_window: int = 16,
+                 straggler_factor: float = 3.0,
+                 straggler_min_samples: int = 5,
+                 poll_interval: float = 0.002):
+        self.scheduler = scheduler
+        self.executor = executor
+        self.store = store or StateStore()
+        self.backfill_window = backfill_window
+        self.straggler_factor = straggler_factor
+        self.straggler_min_samples = straggler_min_samples
+        self.poll = poll_interval
+
+        self.inbox: "queue.Queue[TaskRecord]" = queue.Queue()
+        self._wait: List[Tuple[int, int, TaskRecord]] = []   # heap
+        self._seq = 0
+        self._running: Dict[str, TaskRecord] = {}
+        self._replicas: Dict[str, str] = {}                  # replica -> orig
+        self._done_cb: Dict[str, Callable] = {}
+        self._durations: List[float] = []
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._sem = threading.Semaphore(max_workers)
+        self._threads: List[threading.Thread] = []
+        self._sched_thread = threading.Thread(target=self._loop, daemon=True)
+        self._mon_thread = threading.Thread(target=self._monitor, daemon=True)
+        self._started = False
+
+    # ------------------------------ api -------------------------------- #
+    def start(self):
+        if not self._started:
+            self._started = True
+            self._sched_thread.start()
+            self._mon_thread.start()
+        return self
+
+    def submit(self, task: TaskRecord, done_cb: Optional[Callable] = None):
+        if done_cb is not None:
+            self._done_cb[task.uid] = done_cb
+        self.inbox.put(task)
+
+    def submit_bulk(self, tasks, done_cb: Optional[Callable] = None):
+        """Bulk submission (the paper's named future work): one inbox
+        operation for a whole batch, cutting per-task queue overhead."""
+        for t in tasks:
+            if done_cb is not None:
+                self._done_cb[t.uid] = done_cb
+        for t in tasks:
+            self.inbox.put(t)
+
+    def shutdown(self, wait: bool = True, timeout: float = 60.0):
+        if wait:
+            deadline = time.monotonic() + timeout
+            while time.monotonic() < deadline:
+                with self._lock:
+                    idle = not self._wait and not self._running
+                if idle and self.inbox.empty():
+                    break
+                time.sleep(self.poll)
+        self._stop.set()
+
+    def inject_slot_failure(self, slots):
+        """Simulate node failure: victims are FAILED then retried elsewhere."""
+        victims = self.scheduler.mark_failed(slots)
+        with self._lock:
+            for uid in victims:
+                t = self._running.get(uid)
+                if t is not None:
+                    t.error = RuntimeError(f"slot failure on {slots}")
+        return victims
+
+    # --------------------------- scheduling ----------------------------- #
+    def _loop(self):
+        while not self._stop.is_set():
+            moved = False
+            try:
+                while True:
+                    t = self.inbox.get_nowait()
+                    with self._lock:
+                        heapq.heappush(self._wait,
+                                       (-t.resources.priority, self._seq, t))
+                        self._seq += 1
+                    moved = True
+            except queue.Empty:
+                pass
+            launched = self._try_schedule()
+            if not moved and not launched:
+                time.sleep(self.poll)
+
+    def _try_schedule(self) -> bool:
+        launched = False
+        with self._lock:
+            window = []
+            rest = []
+            while self._wait and len(window) < self.backfill_window:
+                window.append(heapq.heappop(self._wait))
+            for item in window:
+                _, _, t = item
+                if t.state in TERMINAL:      # canceled while queued
+                    continue
+                slots = self.scheduler.allocate(t.uid, t.resources.slots)
+                if slots is None:
+                    rest.append(item)        # backfill: keep trying later ones
+                    continue
+                t.slot_ids = slots
+                t.transition(TaskState.SCHEDULED, self.store)
+                self._running[t.uid] = t
+                th = threading.Thread(target=self._run_task, args=(t,),
+                                      daemon=True)
+                self._threads.append(th)
+                th.start()
+                launched = True
+            for item in rest:
+                heapq.heappush(self._wait, item)
+        return launched
+
+    # ---------------------------- execution ----------------------------- #
+    def _run_task(self, task: TaskRecord):
+        with self._sem:
+            task.transition(TaskState.LAUNCHING, self.store)
+            try:
+                if task.kind == "spmd":
+                    # materialize the sub-mesh + specialized callable now so
+                    # LAUNCHING captures compile cost (the ibrun analog)...
+                    mesh = self.executor.submesh(task.slot_ids,
+                                                 task.resources.mesh_shape)
+                task.transition(TaskState.RUNNING, self.store)
+                t0 = time.monotonic()
+                result = self.executor.execute(task)
+                dt = time.monotonic() - t0
+                if task.error is not None:     # slot failed mid-flight
+                    raise task.error
+                task.result = result
+                self._finish(task, TaskState.DONE, dt)
+            except BaseException as e:   # noqa: BLE001 — agent must survive
+                task.error = e
+                self._finish(task, TaskState.FAILED, None)
+
+    def _finish(self, task: TaskRecord, state: TaskState, duration):
+        self.scheduler.release(task.uid)
+        with self._lock:
+            self._running.pop(task.uid, None)
+            if duration is not None:
+                self._durations.append(duration)
+            orig_uid = self._replicas.pop(task.uid, None)
+
+        if state == TaskState.FAILED and task.retries < task.max_retries:
+            task.retries += 1
+            task.error = None
+            task.slot_ids = ()
+            task.transition(TaskState.TRANSLATED, self.store)
+            self.inbox.put(task)
+            return
+
+        # replica bookkeeping: first finisher wins, loser is canceled
+        if orig_uid is not None:
+            cb = self._done_cb.pop(orig_uid, None)
+            with self._lock:
+                orig = self._running.get(orig_uid)
+            if state == TaskState.DONE and cb is not None:
+                task.transition(state, self.store)
+                cb(task)
+                if orig is not None:
+                    orig.transition(TaskState.CANCELED, self.store)
+                return
+            task.transition(state, self.store)
+            return
+
+        task.transition(state, self.store)
+        cb = self._done_cb.pop(task.uid, None)
+        if cb is not None:
+            cb(task)
+
+    # ----------------------------- monitor ------------------------------ #
+    def _deadline(self) -> Optional[float]:
+        with self._lock:
+            if len(self._durations) < self.straggler_min_samples:
+                return None
+            xs = sorted(self._durations)[-100:]
+            p95 = xs[max(0, int(len(xs) * 0.95) - 1)]
+            return p95 * self.straggler_factor
+
+    def _monitor(self):
+        while not self._stop.is_set():
+            time.sleep(self.poll * 10)
+            dl = self._deadline()
+            if dl is None:
+                continue
+            now = time.monotonic()
+            with self._lock:
+                candidates = [
+                    t for t in self._running.values()
+                    if t.state == TaskState.RUNNING
+                    and t.uid not in self._replicas.values()
+                    and t.replica_of is None
+                    and now - t.timestamps.get("RUNNING", now) > dl
+                    and self.scheduler.n_free >= t.resources.slots]
+            for t in candidates:
+                rep = TaskRecord(
+                    uid=new_uid("replica"), kind=t.kind, fn=t.fn,
+                    args=t.args, kwargs=t.kwargs, resources=t.resources,
+                    replica_of=t.uid)
+                with self._lock:
+                    self._replicas[rep.uid] = t.uid
+                rep.transition(TaskState.TRANSLATED, self.store)
+                self.inbox.put(rep)
+
+    # ------------------------------ stats ------------------------------- #
+    def utilization_timeline(self):
+        """Per-task state intervals for the Fig.6-style breakdown."""
+        return {uid: dict(t.timestamps)
+                for uid, t in list(self._running.items())}

@@ -1,0 +1,61 @@
+"""App decorators — the Parsl programming model, plus the resource-spec
+extension the paper adds for RP (§IV-D: "we extended Parsl's API to allow
+users to define those parameters").
+
+  @python_app                      — single-slot Python function
+  @spmd_app(slots=8, mesh=(4, 2))  — SPMD function over a device sub-mesh;
+                                     body receives the sub-mesh first arg
+  @bash_app                        — function returning a shell command line
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional, Tuple
+
+from .dfk import current_dfk
+from .futures import AppFuture, ResourceSpec
+
+
+def _mk_app(fn: Callable, kind: str, resources: ResourceSpec,
+            retries: int, executor: Optional[str]):
+    fn.__app_kind__ = kind
+    fn.__resources__ = resources
+    fn.__executor__ = executor
+
+    @functools.wraps(fn)
+    def invoke(*args, **kwargs) -> AppFuture:
+        return current_dfk().submit(fn, args, kwargs, resources=resources,
+                                    retries=retries, executor=executor)
+
+    invoke.__wrapped_app__ = fn
+    return invoke
+
+
+def python_app(fn=None, *, retries: int = 0, executor: Optional[str] = None,
+               slots: int = 1):
+    def deco(f):
+        return _mk_app(f, "python", ResourceSpec(slots=slots, cpu_only=True),
+                       retries, executor)
+    return deco(fn) if fn is not None else deco
+
+
+def spmd_app(fn=None, *, slots: int = 1,
+             mesh: Optional[Tuple[int, int]] = None, retries: int = 0,
+             executor: Optional[str] = None, priority: int = 0,
+             jit: bool = True):
+    """jit=False for bodies that manage their own jit (e.g. a training
+    segment calling a pre-jitted step) or that are not traceable."""
+    def deco(f):
+        f.__spmd_jit__ = jit
+        return _mk_app(f, "spmd",
+                       ResourceSpec(slots=slots, mesh_shape=mesh,
+                                    priority=priority),
+                       retries, executor)
+    return deco(fn) if fn is not None else deco
+
+
+def bash_app(fn=None, *, retries: int = 0, executor: Optional[str] = None):
+    def deco(f):
+        return _mk_app(f, "bash", ResourceSpec(slots=1, cpu_only=True),
+                       retries, executor)
+    return deco(fn) if fn is not None else deco

@@ -1,0 +1,195 @@
+"""DataFlowKernel — the Parsl-side engine (§II-B / Fig. 1 of the paper).
+
+Wraps every app invocation in an AppFuture, maintains the task DAG (edges =
+futures passed between apps), submits a task to its executor only when its
+dependencies resolve, and tracks every task's state.
+
+Two submission modes toward RPEX:
+  * stream (paper's current behavior): each ready task submitted one by one;
+  * bulk (paper's named future work): ready tasks are batched per tick and
+    flushed with one submit_bulk call — Exp-2 measures the difference.
+
+Restart: if the executor exposes a journaled StateStore and the DFK is given
+a ``run_id``, tasks are keyed "<run_id>/<app>:<index>"; resubmitted tasks
+whose key is already DONE in the journal resolve immediately from the
+recorded result (checkpoint/restart at the workflow level).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+from .executors import Executor, ParslTask, ThreadPoolExecutor
+from .futures import AppFuture, ResourceSpec, TaskRecord, TaskState, new_uid
+from .translator import translate
+
+_current: List["DataFlowKernel"] = []
+
+
+def _find_futures(obj, out=None):
+    """AppFutures anywhere inside nested lists/tuples/dicts."""
+    out = out if out is not None else []
+    if isinstance(obj, AppFuture):
+        out.append(obj)
+    elif isinstance(obj, (list, tuple)):
+        for x in obj:
+            _find_futures(x, out)
+    elif isinstance(obj, dict):
+        for x in obj.values():
+            _find_futures(x, out)
+    return out
+
+
+def _resolve(obj):
+    """Substitute resolved results for futures, preserving structure
+    (including NamedTuples, e.g. optimizer states)."""
+    if isinstance(obj, AppFuture):
+        return obj.result()
+    if isinstance(obj, list):
+        return [_resolve(x) for x in obj]
+    if isinstance(obj, tuple):
+        vals = [_resolve(x) for x in obj]
+        if hasattr(obj, "_fields"):          # NamedTuple
+            return type(obj)(*vals)
+        return tuple(vals)
+    if isinstance(obj, dict):
+        return {k: _resolve(v) for k, v in obj.items()}
+    return obj
+
+
+def current_dfk() -> "DataFlowKernel":
+    if not _current:
+        raise RuntimeError("no active DataFlowKernel; use `with DataFlowKernel(...)`")
+    return _current[-1]
+
+
+class DataFlowKernel:
+    def __init__(self, executors: Optional[Dict[str, Executor]] = None,
+                 default_executor: Optional[str] = None,
+                 bulk: bool = False, bulk_window: float = 0.002,
+                 run_id: Optional[str] = None):
+        self.executors = executors or {"threads": ThreadPoolExecutor()}
+        self.default_executor = default_executor or next(iter(self.executors))
+        self.bulk = bulk
+        self.bulk_window = bulk_window
+        self.run_id = run_id
+        self._lock = threading.Lock()
+        self._invocation_idx: Dict[str, int] = {}
+        self._pending_bulk: Dict[str, List[Tuple[ParslTask, AppFuture]]] = {}
+        self._flusher: Optional[threading.Timer] = None
+        self.tasks: Dict[str, TaskRecord] = {}   # DAG nodes
+        self.edges: List[Tuple[str, str]] = []   # (producer, consumer)
+        self.t_start = time.monotonic()
+
+    # --------------------------- context mgmt --------------------------- #
+    def __enter__(self):
+        _current.append(self)
+        return self
+
+    def __exit__(self, *exc):
+        self.shutdown()
+        _current.remove(self)
+        return False
+
+    def shutdown(self):
+        self.flush()
+        for ex in self.executors.values():
+            ex.shutdown()
+
+    # ----------------------------- submission --------------------------- #
+    def submit(self, fn, args: tuple = (), kwargs: Optional[dict] = None,
+               resources: Optional[ResourceSpec] = None, retries: int = 0,
+               executor: Optional[str] = None) -> AppFuture:
+        kwargs = kwargs or {}
+        name = getattr(fn, "__name__", "app")
+        with self._lock:
+            idx = self._invocation_idx.get(name, 0)
+            self._invocation_idx[name] = idx + 1
+        key = f"{self.run_id}/{name}:{idx}" if self.run_id else None
+
+        # the DFK-side DAG node (distinct from the pilot-side TaskRecord the
+        # translator creates later — mirrors the paper's two task objects)
+        node = TaskRecord(uid=new_uid("dfk"), kind="parsl", fn=fn,
+                          args=args, kwargs=kwargs,
+                          resources=resources or getattr(
+                              fn, "__resources__", None) or ResourceSpec())
+        future = AppFuture(node)
+        self.tasks[node.uid] = node
+
+        # replay from journal (workflow-level restart)
+        ex = self.executors[executor or getattr(fn, "__executor__", None)
+                            or self.default_executor]
+        store = getattr(getattr(ex, "pilot", None), "store", None)
+        if key is not None and store is not None:
+            found, result = store.completed_result(key)
+            if found:
+                node.result = result
+                node.transition(TaskState.DONE)
+                future.set_result(result)
+                return future
+
+        # dependency resolution: any AppFuture in args/kwargs — including
+        # nested inside lists/tuples/dicts — is a dataflow edge
+        deps = [f for f in _find_futures((args, kwargs)) if not f.done()]
+        for d in deps:
+            self.edges.append((d.uid, node.uid))
+            node.depends_on.append(d.uid)
+
+        def launch():
+            try:
+                r_args = tuple(_resolve(a) for a in args)
+                r_kwargs = {k: _resolve(v) for k, v in kwargs.items()}
+            except BaseException as e:   # upstream failure propagates
+                node.transition(TaskState.FAILED)
+                if not future.done():
+                    future.set_exception(e)
+                return
+            pt = ParslTask(fn, r_args, r_kwargs, node.resources, retries, key)
+            node.transition(TaskState.TRANSLATED)
+            self._dispatch(ex, pt, future)
+
+        if not deps:
+            launch()
+        else:
+            remaining = [len(deps)]
+            rlock = threading.Lock()
+
+            def on_dep(_):
+                with rlock:
+                    remaining[0] -= 1
+                    ready = remaining[0] == 0
+                if ready:
+                    launch()
+
+            for d in deps:
+                d.add_done_callback(on_dep)
+        return future
+
+    # ------------------------------- bulk -------------------------------- #
+    def _dispatch(self, ex: Executor, pt: ParslTask, future: AppFuture):
+        if self.bulk and ex.supports_bulk:
+            with self._lock:
+                self._pending_bulk.setdefault(ex.label, []).append((pt, future))
+                if self._flusher is None:
+                    self._flusher = threading.Timer(self.bulk_window,
+                                                    self.flush)
+                    self._flusher.daemon = True
+                    self._flusher.start()
+        else:
+            ex.submit(pt, future)
+
+    def flush(self):
+        with self._lock:
+            pending = self._pending_bulk
+            self._pending_bulk = {}
+            if self._flusher is not None:
+                self._flusher.cancel()
+                self._flusher = None
+        for label, pairs in pending.items():
+            if pairs:
+                self.executors[label].submit_bulk(pairs)
+
+    # ------------------------------ graph ------------------------------- #
+    def dag(self):
+        return {"nodes": list(self.tasks), "edges": list(self.edges)}

@@ -1,0 +1,105 @@
+"""Task state machine + AppFuture (the Parsl-side future abstraction).
+
+State model follows the paper's two systems:
+
+  Parsl/DFK states:   pending -> launched -> running -> done | failed
+  RP task states:     NEW -> TRANSLATED -> SCHEDULED -> LAUNCHING ->
+                      RUNNING -> DONE | FAILED | CANCELED
+
+The RP states map 1:1 onto the resource-utilization categories of the
+paper's Fig. 6 (Scheduled / Launching / Running / Idle): every transition is
+timestamped in the TaskRecord so benchmarks/exp2 can integrate per-slot
+timelines exactly the way the paper does.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+
+class TaskState(str, Enum):
+    NEW = "NEW"
+    TRANSLATED = "TRANSLATED"
+    SCHEDULED = "SCHEDULED"
+    LAUNCHING = "LAUNCHING"
+    RUNNING = "RUNNING"
+    DONE = "DONE"
+    FAILED = "FAILED"
+    CANCELED = "CANCELED"
+
+
+TERMINAL = {TaskState.DONE, TaskState.FAILED, TaskState.CANCELED}
+
+_uid = itertools.count()
+
+
+def new_uid(prefix: str = "task") -> str:
+    return f"{prefix}.{next(_uid):06d}"
+
+
+@dataclass
+class ResourceSpec:
+    """Per-task resource requirements (the RP task-description fields Parsl
+    lacks — the API extension §IV-D of the paper calls out)."""
+    slots: int = 1                  # device slots (chips); MPI "ranks"
+    mesh_shape: Optional[Tuple[int, int]] = None   # (data, model) sub-mesh
+    cpu_only: bool = False          # pre/post-processing helper tasks
+    walltime: Optional[float] = None
+    priority: int = 0
+
+    def __post_init__(self):
+        if self.slots < 1:
+            raise ValueError(f"slots must be >= 1, got {self.slots}")
+        if self.mesh_shape is not None:
+            d, m = self.mesh_shape
+            if d * m != self.slots:
+                raise ValueError(
+                    f"mesh_shape {self.mesh_shape} inconsistent with "
+                    f"slots={self.slots}")
+
+
+@dataclass
+class TaskRecord:
+    uid: str
+    kind: str                       # python | spmd | bash
+    fn: Optional[Callable] = None
+    args: tuple = ()
+    kwargs: dict = field(default_factory=dict)
+    resources: ResourceSpec = field(default_factory=ResourceSpec)
+    state: TaskState = TaskState.NEW
+    timestamps: Dict[str, float] = field(default_factory=dict)
+    depends_on: List[str] = field(default_factory=list)
+    result: Any = None
+    error: Optional[BaseException] = None
+    retries: int = 0
+    max_retries: int = 0
+    slot_ids: Tuple[int, ...] = ()
+    replica_of: Optional[str] = None
+
+    def transition(self, state: TaskState, store=None):
+        self.state = state
+        self.timestamps[state.value] = time.monotonic()
+        if store is not None:
+            store.record(self)
+
+
+class AppFuture(Future):
+    """Parsl-style future: returned immediately on app invocation; reading
+    the result blocks until the task completes; passing it to another app
+    creates a dataflow edge."""
+
+    def __init__(self, task: TaskRecord):
+        super().__init__()
+        self.task = task
+
+    @property
+    def uid(self) -> str:
+        return self.task.uid
+
+    def __repr__(self):
+        return f"<AppFuture {self.task.uid} {self.task.state.value}>"

@@ -1,0 +1,141 @@
+"""Pilot abstraction — client-side managers (the RP split kept intact).
+
+PilotManager acquires *pilots* (device blocks held for the workload's
+lifetime — on a real cluster, a jax.distributed slice; here, the process's
+device set, virtualized into slots).  TaskManager submits translated tasks
+to a pilot's Agent and tracks their futures.  The separation mirrors RP:
+managers run client-side, the Agent runs "on the resource".
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+
+from .agent import Agent
+from .futures import ResourceSpec, TaskRecord, TaskState, new_uid
+from .scheduler import SlotScheduler
+from .spmd_executor import SPMDFunctionExecutor
+from .store import StateStore
+
+
+@dataclass
+class PilotDescription:
+    n_slots: int = 0                  # 0 = one slot per visible device
+    devices: Optional[list] = None    # explicit device set (sub-pilot)
+    journal: Optional[str] = None     # StateStore journal path (restart)
+    max_workers: int = 32
+    cache_executables: bool = True
+    backfill_window: int = 16
+    straggler_factor: float = 3.0
+
+
+class Pilot:
+    def __init__(self, desc: PilotDescription, uid: Optional[str] = None):
+        self.uid = uid or new_uid("pilot")
+        self.desc = desc
+        devices = desc.devices if desc.devices is not None else jax.devices()
+        n = desc.n_slots or len(devices)
+        self.scheduler = SlotScheduler(n)
+        self.executor = SPMDFunctionExecutor(devices,
+                                             cache=desc.cache_executables)
+        self.store = StateStore(desc.journal)
+        self.agent = Agent(self.scheduler, self.executor, self.store,
+                           max_workers=desc.max_workers,
+                           backfill_window=desc.backfill_window,
+                           straggler_factor=desc.straggler_factor).start()
+        self.t_start = time.monotonic()
+
+    # elastic scaling --------------------------------------------------- #
+    def grow(self, n_slots: int):
+        return self.scheduler.grow(n_slots)
+
+    def shrink(self, n_slots: int):
+        return self.scheduler.shrink(n_slots)
+
+    @property
+    def n_slots(self) -> int:
+        return self.scheduler.capacity
+
+    def close(self):
+        self.agent.shutdown()
+        self.store.close()
+
+
+class PilotManager:
+    def __init__(self):
+        self.pilots: Dict[str, Pilot] = {}
+
+    def submit_pilot(self, desc: PilotDescription) -> Pilot:
+        p = Pilot(desc)
+        self.pilots[p.uid] = p
+        return p
+
+    def cancel(self, uid: str):
+        p = self.pilots.pop(uid, None)
+        if p:
+            p.close()
+
+    def close(self):
+        for uid in list(self.pilots):
+            self.cancel(uid)
+
+
+class TaskManager:
+    """Submits task descriptions to a pilot's agent; tracks completion."""
+
+    def __init__(self, pilot: Pilot):
+        self.pilot = pilot
+        self.tasks: Dict[str, TaskRecord] = {}
+        self._events: Dict[str, threading.Event] = {}
+
+    def submit(self, task: TaskRecord,
+               done_cb: Optional[Callable] = None) -> TaskRecord:
+        self.tasks[task.uid] = task
+        ev = threading.Event()
+        self._events[task.uid] = ev
+
+        def _cb(t: TaskRecord):
+            ev.set()
+            if done_cb is not None:
+                done_cb(t)
+
+        task.transition(TaskState.TRANSLATED, self.pilot.store)
+        self.pilot.agent.submit(task, done_cb=_cb)
+        return task
+
+    def submit_bulk(self, tasks: List[TaskRecord],
+                    done_cb: Optional[Callable] = None) -> List[TaskRecord]:
+        for t in tasks:
+            self.tasks[t.uid] = t
+            ev = threading.Event()
+            self._events[t.uid] = ev
+            t.transition(TaskState.TRANSLATED, self.pilot.store)
+        if done_cb is None:
+            self.pilot.agent.submit_bulk(tasks,
+                                         done_cb=lambda t: self._events[
+                                             t.uid if t.replica_of is None
+                                             else t.replica_of].set())
+        else:
+            def _cb(t: TaskRecord):
+                uid = t.uid if t.replica_of is None else t.replica_of
+                self._events[uid].set()
+                done_cb(t)
+            self.pilot.agent.submit_bulk(tasks, done_cb=_cb)
+        return tasks
+
+    def wait(self, uids=None, timeout: Optional[float] = None) -> bool:
+        uids = uids if uids is not None else list(self._events)
+        deadline = None if timeout is None else time.monotonic() + timeout
+        for uid in uids:
+            ev = self._events.get(uid)
+            if ev is None:
+                continue
+            t = None if deadline is None else max(0.0,
+                                                  deadline - time.monotonic())
+            if not ev.wait(t):
+                return False
+        return True

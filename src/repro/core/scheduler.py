@@ -1,0 +1,130 @@
+"""Device-slot scheduler — the RP Agent scheduler analog.
+
+Slots are TPU chips in the pilot's device grid, identified 0..N-1 in mesh
+order.  Allocation is *contiguous + power-of-2 aligned* first-fit: a
+contiguous aligned range of the flattened mesh corresponds to a rectangular
+TPU sub-slice with intact ICI neighborhoods (the analogue of giving each MPI
+Intra-communicator a compact node set), and alignment prevents the
+fragmentation that would otherwise strand capacity under churn.
+
+Invariants (property-tested in tests/test_scheduler.py):
+  * an allocated slot is never allocated to a second task until released
+  * allocations never include failed or shrunk-away slots
+  * allocate(n) returns exactly n contiguous slots aligned to 2^ceil(log2 n)
+    (for power-of-2 n) or None
+  * release() makes slots reusable; fragmentation never loses capacity
+    (any request <= largest aligned free block succeeds)
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional, Set, Tuple
+
+
+def _align_of(n: int) -> int:
+    a = 1
+    while a < n:
+        a *= 2
+    return a
+
+
+class SlotScheduler:
+    def __init__(self, n_slots: int):
+        if n_slots < 1:
+            raise ValueError("need at least one slot")
+        self._lock = threading.Lock()
+        self.capacity = n_slots          # includes busy, excludes failed
+        self._extent = n_slots           # highest slot id ever + 1
+        self._free: Set[int] = set(range(n_slots))
+        self._failed: Set[int] = set()
+        self._busy: Dict[str, Tuple[int, ...]] = {}   # uid -> slots
+
+    # ------------------------------ alloc ------------------------------ #
+    def allocate(self, uid: str, n: int) -> Optional[Tuple[int, ...]]:
+        """Contiguous aligned first-fit; returns slot ids or None."""
+        if n < 1:
+            raise ValueError("n >= 1")
+        align = _align_of(n)
+        with self._lock:
+            if uid in self._busy:
+                raise KeyError(f"{uid} already holds an allocation")
+            start = 0
+            while start + n <= self._extent:
+                block = range(start, start + n)
+                if all(s in self._free for s in block):
+                    slots = tuple(block)
+                    self._free.difference_update(slots)
+                    self._busy[uid] = slots
+                    return slots
+                start += align
+            return None
+
+    def release(self, uid: str):
+        with self._lock:
+            slots = self._busy.pop(uid, ())
+            for s in slots:
+                if s not in self._failed and s < self._extent:
+                    self._free.add(s)
+
+    def owner_of(self, slot: int) -> Optional[str]:
+        with self._lock:
+            for uid, slots in self._busy.items():
+                if slot in slots:
+                    return uid
+            return None
+
+    # ------------------------------ fault ------------------------------ #
+    def mark_failed(self, slots) -> List[str]:
+        """Remove slots from service; returns uids of tasks running on them
+        (the agent must fail/retry those tasks)."""
+        with self._lock:
+            victims = []
+            for s in slots:
+                if s in self._failed:
+                    continue
+                self._failed.add(s)
+                if s in self._free:
+                    self._free.discard(s)
+                    self.capacity -= 1
+                else:
+                    for uid, held in self._busy.items():
+                        if s in held and uid not in victims:
+                            victims.append(uid)
+                    self.capacity -= 1
+            return victims
+
+    # ----------------------------- elastic ----------------------------- #
+    def grow(self, n: int) -> Tuple[int, ...]:
+        with self._lock:
+            new = tuple(range(self._extent, self._extent + n))
+            self._free.update(new)
+            self._extent += n
+            self.capacity += n
+            return new
+
+    def shrink(self, n: int) -> Tuple[int, ...]:
+        """Retire up to n FREE slots (never preempts running tasks)."""
+        with self._lock:
+            victims = sorted(self._free, reverse=True)[:n]
+            for s in victims:
+                self._free.discard(s)
+                self._failed.add(s)     # retired == out of service
+                self.capacity -= 1
+            return tuple(victims)
+
+    # ------------------------------ stats ------------------------------ #
+    @property
+    def n_free(self) -> int:
+        with self._lock:
+            return len(self._free)
+
+    @property
+    def n_busy(self) -> int:
+        with self._lock:
+            return sum(len(v) for v in self._busy.values())
+
+    def utilization(self) -> float:
+        with self._lock:
+            total = len(self._free) + sum(len(v) for v in self._busy.values())
+            return (sum(len(v) for v in self._busy.values()) / total
+                    if total else 0.0)

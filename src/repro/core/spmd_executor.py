@@ -1,0 +1,109 @@
+"""SPMD function executor — the paper's MPI-function-executor, TPU-native.
+
+The paper's executor launches one persistent MPI world, then carves
+Intra-communicators so many heterogeneous MPI Python functions run
+concurrently.  Here the persistent world is the pilot's device set; an
+"Intra-communicator" is a sub-mesh carved from it; collectives inside task
+functions are ``jax.lax`` ops under ``shard_map``.
+
+The paper's §V-A performance lesson — *build the communicator once, reuse
+it, cache it* — is structural here: sub-meshes and specialized callables are
+cached keyed by (function, sub-mesh, abstract inputs).  The first dispatch
+of a key pays trace+compile (the paper's `Launching`/`ibrun` analog); every
+subsequent task with the same signature is a cheap cached call.  The
+``cache=False`` mode exists only for the Exp-1 ablation that reproduces the
+paper's cold-communicator overhead.
+
+On the CPU container, slots may outnumber real devices: slot blocks then
+map onto the available devices (dedup'd), preserving scheduling semantics
+while executing on what exists — the same code drives a real pod.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+
+from .futures import ResourceSpec, TaskRecord
+
+
+class SPMDFunctionExecutor:
+    def __init__(self, devices=None, cache: bool = True):
+        self.devices = list(devices if devices is not None else jax.devices())
+        self.cache_enabled = cache
+        self._mesh_cache: Dict[Tuple, Any] = {}
+        self._call_cache: Dict[Tuple, Callable] = {}
+        self._lock = threading.Lock()
+        self.stats = {"compiles": 0, "cache_hits": 0}
+
+    # ----------------------------- sub-mesh ----------------------------- #
+    def submesh(self, slot_ids: Tuple[int, ...],
+                mesh_shape: Optional[Tuple[int, int]] = None):
+        """Carve the sub-mesh ('Intra-communicator') for a slot block."""
+        nreal = len(self.devices)
+        devs = []
+        seen = set()
+        for s in slot_ids:
+            d = self.devices[s % nreal]
+            if id(d) not in seen:
+                seen.add(id(d))
+                devs.append(d)
+        n = len(devs)
+        if mesh_shape and mesh_shape[0] * mesh_shape[1] <= n:
+            shape = mesh_shape
+        else:
+            shape = (n, 1)
+        key = (tuple(d.id for d in devs[: shape[0] * shape[1]]), shape)
+        with self._lock:
+            if self.cache_enabled and key in self._mesh_cache:
+                return self._mesh_cache[key]
+        mesh = jax.make_mesh(shape, ("data", "model"),
+                             devices=devs[: shape[0] * shape[1]])
+        with self._lock:
+            if self.cache_enabled:
+                self._mesh_cache[key] = mesh
+        return mesh
+
+    # ----------------------------- dispatch ----------------------------- #
+    def _specialize(self, fn: Callable, mesh, jit: bool):
+        """One compiled callable per (fn, mesh) — the communicator cache."""
+        key = (id(fn), tuple(d.id for d in mesh.devices.flat),
+               mesh.shape_tuple)
+        with self._lock:
+            if self.cache_enabled and key in self._call_cache:
+                self.stats["cache_hits"] += 1
+                return self._call_cache[key]
+        if jit:
+            wrapped = jax.jit(lambda *a, **kw: fn(mesh, *a, **kw))
+        else:
+            wrapped = lambda *a, **kw: fn(mesh, *a, **kw)  # noqa: E731
+        with self._lock:
+            # double-checked: a concurrent miss may have registered first —
+            # reuse its callable so both share one compiled executable
+            if self.cache_enabled and key in self._call_cache:
+                self.stats["cache_hits"] += 1
+                return self._call_cache[key]
+            self.stats["compiles"] += 1
+            if self.cache_enabled:
+                self._call_cache[key] = wrapped
+        return wrapped
+
+    def execute(self, task: TaskRecord) -> Any:
+        """Run a task body on its allocated slots.  Blocking; called from an
+        agent worker thread (the MPI-Worker analog)."""
+        kwargs = dict(task.kwargs)
+        jit = kwargs.pop("_jit", True)
+        if task.kind == "spmd":
+            mesh = self.submesh(task.slot_ids, task.resources.mesh_shape)
+            call = self._specialize(task.fn, mesh, jit)
+            out = call(*task.args, **kwargs)
+        else:  # plain python / bash-wrapped function: single slot
+            out = task.fn(*task.args, **kwargs)
+        out = jax.block_until_ready(out) if _has_arrays(out) else out
+        return out
+
+
+def _has_arrays(x) -> bool:
+    return any(isinstance(l, jax.Array) for l in jax.tree.leaves(x))

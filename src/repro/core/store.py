@@ -1,0 +1,90 @@
+"""StateStore — the MongoDB analog: journaled task/pilot state.
+
+RP uses a MongoDB instance to share state between client-side managers and
+the agent; in a single-controller JAX deployment the equivalent is an
+in-process store with a JSON-lines journal on disk.  The journal gives the
+workflow layer crash-consistent restart: a restarted DFK replays DONE tasks
+(futures resolve immediately from recorded results when re-submitted with
+the same workflow key) and resubmits in-flight ones.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+from .futures import TaskRecord, TaskState
+
+
+class StateStore:
+    def __init__(self, journal_path: Optional[str] = None):
+        self.journal_path = Path(journal_path) if journal_path else None
+        self._lock = threading.Lock()
+        self.tasks: Dict[str, dict] = {}
+        self._fh = None
+        if self.journal_path:
+            self.journal_path.parent.mkdir(parents=True, exist_ok=True)
+            if self.journal_path.exists():
+                self._replay()
+            self._fh = open(self.journal_path, "a", buffering=1)
+
+    def _replay(self):
+        with open(self.journal_path) as fh:
+            for line in fh:
+                try:
+                    rec = json.loads(line)
+                except json.JSONDecodeError:
+                    continue        # torn tail write from a crash
+                self.tasks[rec["uid"]] = rec
+
+    def record(self, task: TaskRecord, workflow_key: Optional[str] = None):
+        rec = {
+            "uid": task.uid,
+            "key": workflow_key,
+            "kind": task.kind,
+            "state": task.state.value,
+            "retries": task.retries,
+            "slot_ids": list(task.slot_ids),
+            "t": time.time(),
+        }
+        if task.state == TaskState.DONE and _jsonable(task.result):
+            rec["result"] = task.result
+        if task.error is not None:
+            rec["error"] = repr(task.error)[:500]
+        with self._lock:
+            prev = self.tasks.get(task.uid, {})
+            if "key" not in rec or rec["key"] is None:
+                rec["key"] = prev.get("key")
+            self.tasks[task.uid] = {**prev, **rec}
+            if self._fh:
+                self._fh.write(json.dumps(self.tasks[task.uid]) + "\n")
+
+    def completed_result(self, workflow_key: str):
+        """(found, result) for a previously-DONE task with this key."""
+        with self._lock:
+            for rec in self.tasks.values():
+                if rec.get("key") == workflow_key and \
+                        rec.get("state") == TaskState.DONE.value and \
+                        "result" in rec:
+                    return True, rec["result"]
+        return False, None
+
+    def states(self) -> Dict[str, str]:
+        with self._lock:
+            return {uid: r.get("state", "?") for uid, r in self.tasks.items()}
+
+    def close(self):
+        if self._fh:
+            self._fh.close()
+            self._fh = None
+
+
+def _jsonable(x) -> bool:
+    try:
+        json.dumps(x)
+        return True
+    except (TypeError, ValueError):
+        return False

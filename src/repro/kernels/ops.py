@@ -1,0 +1,99 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret=None`` auto-selects: compiled on TPU, interpret elsewhere — so
+the same model code (use_pallas=True) runs the real kernel on hardware and
+the Python-executed kernel body on the CPU container.
+
+The SSD wrapper composes the Pallas intra-chunk kernel with the host-side
+inter-chunk recurrence (a lax.scan over per-chunk states) and defines a
+custom VJP that recomputes kernel terms in the backward pass via the jnp
+reference (training path memory: O(S) states, no stored (Q,Q) matrices).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import ssd as _ssd
+from . import ref as _ref
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    attn_softcap: float = 0.0, block_q: int = 128,
+                    block_k: int = 128, interpret: Optional[bool] = None):
+    """Forward-only Pallas flash attention (inference/prefill hot path).
+
+    The training path uses the custom-VJP jnp formulation in
+    repro.models.attention (same algorithm; this kernel is its TPU twin and
+    is differentiated via the same reference backward when needed).
+    """
+    return _fa.flash_attention_fwd(
+        q, k, v, causal=causal, window=window, attn_softcap=attn_softcap,
+        block_q=block_q, block_k=block_k,
+        interpret=_auto_interpret(interpret))
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def ssd(x, dt, A, B_, C_, chunk: int = 128,
+        interpret: Optional[bool] = None):
+    """SSD scan: Pallas intra-chunk kernel + host inter-chunk recurrence.
+
+    Same contract as repro.kernels.ref.ssd_reference.
+    Returns (y (B,S,H,P), final_state (B,H,P,N) f32).
+    """
+    y, hT = _ssd_fwd_impl(x, dt, A, B_, C_, chunk, interpret)
+    return y, hT
+
+
+def _ssd_fwd_impl(x, dt, A, B_, C_, chunk, interpret):
+    Bsz, S, H, P = x.shape
+    N = B_.shape[-1]
+    Q = min(chunk, S)
+    nc = S // Q
+    y_intra, states, dall, dchunk = _ssd.ssd_chunk_kernel(
+        x, dt, A, B_, C_, chunk=Q, interpret=_auto_interpret(interpret))
+    Cr = C_.astype(jnp.float32).reshape(Bsz, nc, Q, N)
+
+    def step(h, inp):
+        st_c, dall_c, dch_c, c_c = inp
+        # y_inter_i = C_i . (exp(L_i) * h_prev)
+        y_int = jnp.einsum("bqn,bhq,bhpn->bqhp", c_c, dall_c, h)
+        h_new = h * dch_c[..., None, None] + st_c
+        return h_new, y_int
+
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    hT, y_inter = jax.lax.scan(
+        step, h0,
+        (states.transpose(2, 0, 1, 3, 4), dall.transpose(2, 0, 1, 3),
+         dchunk.transpose(2, 0, 1), Cr.transpose(1, 0, 2, 3)))
+    y_inter = y_inter.transpose(1, 0, 2, 3, 4).reshape(Bsz, S, H, P)
+    y = (y_intra.reshape(Bsz, S, H, P) + y_inter).astype(x.dtype)
+    return y, hT
+
+
+def _ssd_fwd(x, dt, A, B_, C_, chunk, interpret):
+    out = _ssd_fwd_impl(x, dt, A, B_, C_, chunk, interpret)
+    return out, (x, dt, A, B_, C_)
+
+
+def _ssd_bwd(chunk, interpret, res, cts):
+    # backward through the jnp reference (identical math; recomputes chunk
+    # terms instead of storing (Q,Q) matrices)
+    x, dt, A, B_, C_ = res
+    def f(x, dt, A, B_, C_):
+        return _ref.ssd_reference(x, dt, A, B_, C_, chunk=chunk)
+    _, vjp = jax.vjp(f, x, dt, A, B_, C_)
+    return vjp(cts)
+
+
+ssd.defvjp(_ssd_fwd, _ssd_bwd)

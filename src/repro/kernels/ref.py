@@ -1,0 +1,127 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+``attention_reference`` — naive full-softmax attention (quadratic memory);
+``ssd_reference``       — chunked SSD scan (the model's default impl);
+``ssd_sequential``      — step-by-step SSM recurrence (oracle for chunking).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_reference(q, k, v, *, causal: bool = True, window: int = 0,
+                        attn_softcap: float = 0.0, q_offset: int = 0):
+    """q: (B, Sq, Hq, D); k/v: (B, Skv, Hkv, D)."""
+    B, Sq, Hq, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    s = jnp.einsum("bshgd,bkhd->bshgk", qg, k,
+                   preferred_element_type=jnp.float32) * (D ** -0.5)
+    if attn_softcap:
+        s = attn_softcap * jnp.tanh(s / attn_softcap)
+    q_pos = q_offset + jnp.arange(Sq)
+    kv_pos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kv_pos[None, :] <= q_pos[:, None]
+    if window:
+        mask &= kv_pos[None, :] > (q_pos[:, None] - window)
+    s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bshgk,bkhd->bshgd", p.astype(v.dtype), v)
+    return o.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+# ------------------------------- SSD ----------------------------------- #
+
+def ssd_sequential(x, dt, A, B_, C_, h0: Optional[jnp.ndarray] = None):
+    """Step-by-step SSM recurrence (slow oracle).
+
+    x: (B,S,H,P); dt: (B,S,H); A: (H,); B_/C_: (B,S,N).
+    h_t = exp(dt_t A) h_{t-1} + dt_t * x_t (outer) B_t ;  y_t = C_t . h_t
+    """
+    Bsz, S, H, P = x.shape
+    N = B_.shape[-1]
+    xf = x.astype(jnp.float32)
+    Bf, Cf = B_.astype(jnp.float32), C_.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                       # (B,H,P), (B,H), (B,N), (B,N)
+        decay = jnp.exp(dtt * A[None, :])           # (B,H)
+        h = h * decay[..., None, None] + jnp.einsum(
+            "bh,bhp,bn->bhpn", dtt, xt, bt)
+        y = jnp.einsum("bhpn,bn->bhp", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32) if h0 is None else h0
+    hT, ys = jax.lax.scan(
+        step, h0,
+        (xf.swapaxes(0, 1), dtf.swapaxes(0, 1), Bf.swapaxes(0, 1),
+         Cf.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1).astype(x.dtype), hT
+
+
+def ssd_chunk_terms(xc, dtc, A, Bc, Cc):
+    """Intra-chunk SSD terms for one chunk batch.
+
+    xc: (B,Q,H,P); dtc: (B,Q,H); A: (H,); Bc/Cc: (B,Q,N).
+    Returns (y_intra (B,Q,H,P), state (B,H,P,N), decay_all (B,H,Q),
+    decay_chunk (B,H)).  All f32.
+    """
+    Q = xc.shape[1]
+    la = dtc * A[None, None, :]                       # (B,Q,H) log-decay
+    cum = jnp.cumsum(la, axis=1)                      # L_i (inclusive)
+    # pairwise decay exp(L_i - L_j) for j <= i
+    Li = cum.transpose(0, 2, 1)                       # (B,H,Q)
+    diff = Li[:, :, :, None] - Li[:, :, None, :]      # (B,H,Qi,Qj)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(mask[None, None], jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bin,bjn->bij", Cc, Bc)           # (B,Qi,Qj)
+    M = cb[:, None] * L * dtc.transpose(0, 2, 1)[:, :, None, :]   # (B,H,Qi,Qj)
+    y_intra = jnp.einsum("bhij,bjhp->bihp", M, xc)
+    # chunk state: sum_j exp(L_Q - L_j) dt_j B_j (outer) x_j
+    decay_to_end = jnp.exp(Li[:, :, -1:] - Li)        # (B,H,Q)
+    state = jnp.einsum("bhq,bqh,bqn,bqhp->bhpn", decay_to_end, dtc, Bc, xc)
+    decay_all = jnp.exp(Li)                           # exp(L_i) (B,H,Q)
+    decay_chunk = jnp.exp(Li[:, :, -1])               # (B,H)
+    return y_intra, state, decay_all, decay_chunk
+
+
+def ssd_reference(x, dt, A, B_, C_, *, chunk: int, h0=None):
+    """Chunked SSD: scan over chunks of length ``chunk``.
+
+    Same contract as :func:`ssd_sequential` but O(S*Q) memory / step.
+    """
+    Bsz, S, H, P = x.shape
+    N = B_.shape[-1]
+    Q = min(chunk, S)
+    if S % Q:
+        raise ValueError(f"seq {S} not divisible by chunk {Q}")
+    nc = S // Q
+    xf = x.astype(jnp.float32).reshape(Bsz, nc, Q, H, P)
+    dtf = dt.astype(jnp.float32).reshape(Bsz, nc, Q, H)
+    Bf = B_.astype(jnp.float32).reshape(Bsz, nc, Q, N)
+    Cf = C_.astype(jnp.float32).reshape(Bsz, nc, Q, N)
+
+    def step(h, inp):
+        xc, dtc, bc, cc = inp
+        y_intra, state, decay_all, decay_chunk = ssd_chunk_terms(
+            xc, dtc, A, bc, cc)
+        # inter-chunk: y_i += C_i . (exp(L_i) * h_prev)
+        y_inter = jnp.einsum("bqn,bhq,bhpn->bqhp", cc, decay_all, h)
+        h_new = h * decay_chunk[..., None, None] + state
+        return h_new, y_intra + y_inter
+
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32) if h0 is None else h0
+    hT, ys = jax.lax.scan(
+        step, h0, (xf.swapaxes(0, 1), dtf.swapaxes(0, 1), Bf.swapaxes(0, 1),
+                   Cf.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1).reshape(Bsz, S, H, P)
+    return y.astype(x.dtype), hT

@@ -1,0 +1,105 @@
+"""Pallas TPU kernel for the Mamba2 SSD intra-chunk computation.
+
+Grid: (batch, heads, num_chunks) — each program owns one (chunk x head)
+tile and produces, entirely in VMEM:
+    y_intra  (Q, P)  — the chunk-local quadratic ("attention-like") term
+    state    (P, N)  — the chunk's contribution to the running SSM state
+    decay_all (Q,)   — exp(cumsum(dt*A)) for the inter-chunk correction
+    decay_chunk ()   — exp(full-chunk log-decay)
+The O(S) inter-chunk recurrence (a tiny tensor contraction per chunk) stays
+a lax.scan on the host side (ops.ssd) — it is bandwidth-trivial compared to
+the intra-chunk quadratic term this kernel owns.
+
+Tiling: Q (chunk length, default 128-256) x P (head dim 64/128) and (Q, N)
+B/C tiles; all matmuls are (Q,N)x(N,Q), (Q,Q)x(Q,P), (N,Q)x(Q,P) — MXU
+shapes.  Validated against ref.ssd_chunk_terms / ssd_reference in interpret
+mode (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref,
+            y_ref, st_ref, dall_ref, dchunk_ref, *, Q):
+    x = x_ref[0, 0, 0].astype(jnp.float32)     # (Q, P)
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)   # (Q,)
+    A = a_ref[0].astype(jnp.float32)           # ()
+    Bc = b_ref[0, 0].astype(jnp.float32)       # (Q, N)
+    Cc = c_ref[0, 0].astype(jnp.float32)       # (Q, N)
+
+    la = dt * A                                 # (Q,) log-decay
+    cum = jnp.cumsum(la)                        # L_i inclusive
+    diff = cum[:, None] - cum[None, :]          # (Qi, Qj)
+    iota_i = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    iota_j = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(iota_j <= iota_i, jnp.exp(diff), 0.0)
+    cb = jax.lax.dot_general(Cc, Bc, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Qi,Qj)
+    M = cb * L * dt[None, :]
+    y = jax.lax.dot_general(M, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (Q,P)
+    decay_to_end = jnp.exp(cum[-1] - cum)       # (Q,)
+    wB = Bc * (decay_to_end * dt)[:, None]      # (Q,N)
+    state = jax.lax.dot_general(x, wB, (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (P,N)
+    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+    st_ref[0, 0, 0] = state.astype(st_ref.dtype)
+    dall_ref[0, 0, 0] = jnp.exp(cum).astype(dall_ref.dtype)
+    dchunk_ref[0, 0, 0] = jnp.exp(cum[-1]).astype(dchunk_ref.dtype)
+
+
+def ssd_chunk_kernel(x, dt, A, B_, C_, *, chunk: int, interpret: bool = True):
+    """Intra-chunk terms for all chunks.
+
+    x: (B,S,H,P); dt: (B,S,H) f32; A: (H,); B_/C_: (B,S,N).
+    Returns y_intra (B,S,H,P) f32, states (B,H,nc,P,N) f32,
+    decay_all (B,H,nc,Q) f32, decay_chunk (B,H,nc) f32.
+    """
+    Bsz, S, H, P = x.shape
+    N = B_.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    # layouts: (B,H,nc,Q,*) for per-(head,chunk) tiles
+    xr = x.reshape(Bsz, nc, Q, H, P).transpose(0, 3, 1, 2, 4)
+    dtr = dt.reshape(Bsz, nc, Q, H).transpose(0, 3, 1, 2)
+    Br = B_.reshape(Bsz, nc, Q, N)
+    Cr = C_.reshape(Bsz, nc, Q, N)
+
+    y, st, dall, dchunk = pl.pallas_call(
+        functools.partial(_kernel, Q=Q),
+        grid=(Bsz, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, Q, P), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, h, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, h, c: (b, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, Q, P), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, P, N), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, 1), lambda b, h, c: (b, h, c)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz, H, nc, Q, P), jnp.float32),
+            jax.ShapeDtypeStruct((Bsz, H, nc, P, N), jnp.float32),
+            jax.ShapeDtypeStruct((Bsz, H, nc, Q), jnp.float32),
+            jax.ShapeDtypeStruct((Bsz, H, nc), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xr, dtr, A, Br, Cr)
+    # y back to (B,S,H,P)
+    y = y.transpose(0, 2, 3, 1, 4).reshape(Bsz, S, H, P)
+    return y, st, dall, dchunk
+
+
+def _kernel_ref_note():
+    """The (1,1,...) leading block dims exist because pallas interpret mode
+    requires block shapes to cover every array dim; squeezed in-kernel."""

@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+A *function*, not a module-level constant — importing this module never
+touches jax device state (the dry-run sets XLA_FLAGS before any jax import;
+everything else must keep seeing the real device count).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi_pod adds a leading pod axis (2 pods)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Mesh over whatever devices exist (smoke tests, CPU trainer)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = min(model, max(1, n // data))
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,1 @@
+from . import attention, layers, mamba2, model, moe, transformer  # noqa

@@ -1,0 +1,1 @@
+from .adamw import AdamW, AdamState, cosine_schedule  # noqa

@@ -1,0 +1,103 @@
+"""Sharded AdamW with dtype knobs, global-norm clipping, and LR schedule.
+
+Optimizer state mirrors parameter sharding (it is built by tree-mapping over
+params), so FSDP/TP placement extends to m/v for free.  ``state_dtype``
+selects fp32 (default) or bf16 moments — the knob that lets the 398B-param
+Jamba fit 16 GB/chip optimizer state on a single 256-chip pod (§Perf).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(1, warmup)
+        prog = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: Callable = cosine_schedule(3e-4, 100, 10_000)
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: str = "float32"
+
+    def init(self, params) -> AdamState:
+        dt = jnp.dtype(self.state_dtype)
+        zeros = lambda p: jnp.zeros(p.shape, dt)
+        return AdamState(jnp.zeros((), jnp.int32),
+                         jax.tree.map(zeros, params),
+                         jax.tree.map(zeros, params))
+
+    def abstract_state(self, abstract_params) -> AdamState:
+        dt = jnp.dtype(self.state_dtype)
+        z = lambda p: jax.ShapeDtypeStruct(p.shape, dt)
+        return AdamState(jax.ShapeDtypeStruct((), jnp.dtype("int32")),
+                         jax.tree.map(z, abstract_params),
+                         jax.tree.map(z, abstract_params))
+
+    def state_axes(self, axes_tree) -> AdamState:
+        return AdamState((), axes_tree, axes_tree)
+
+    def update(self, params, grads, state: AdamState):
+        gf = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                             for g in jax.tree.leaves(gf)))
+        scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9))
+        step = state.step + 1
+        lr = self.lr(step)
+        b1, b2 = self.b1, self.b2
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+        dt = jnp.dtype(self.state_dtype)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+            v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+            mhat = m32 / bc1
+            vhat = v32 / bc2
+            step_ = mhat / (jnp.sqrt(vhat) + self.eps)
+            if p.ndim >= 2:                       # decoupled decay on matrices
+                step_ = step_ + self.weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr * step_
+            return new_p.astype(p.dtype), m32.astype(dt), v32.astype(dt)
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state.m)
+        flat_v = jax.tree.leaves(state.v)
+        # Chain leaf updates through optimization_barrier: forces XLA to
+        # schedule them sequentially, so peak temp = ONE leaf's f32
+        # upcasts instead of all leaves' at once (matters at 100B+ params).
+        out = []
+        token = None
+        for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+            if token is not None:
+                p, g = jax.lax.optimization_barrier((p, g, token))[:2]
+            o = upd(p, g, m, v)
+            out.append(o)
+            token = o[0]
+        new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+        new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+        new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+        return new_p, AdamState(step, new_m, new_v), gnorm

@@ -1,0 +1,103 @@
+"""Property tests for the device-slot scheduler (RP Agent analog)."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.scheduler import SlotScheduler, _align_of
+
+
+def test_align_of():
+    assert [_align_of(n) for n in (1, 2, 3, 4, 5, 8, 9)] == \
+        [1, 2, 4, 4, 8, 8, 16]
+
+
+def test_basic_alloc_release():
+    s = SlotScheduler(16)
+    a = s.allocate("t1", 4)
+    assert a == (0, 1, 2, 3)
+    b = s.allocate("t2", 4)
+    assert b == (4, 5, 6, 7)
+    assert s.n_free == 8
+    s.release("t1")
+    c = s.allocate("t3", 8)
+    assert c == (8, 9, 10, 11, 12, 13, 14, 15)
+    d = s.allocate("t4", 4)
+    assert d == (0, 1, 2, 3)          # reused released block
+    assert s.allocate("t5", 4) is None
+
+
+def test_alignment_prevents_straddle():
+    s = SlotScheduler(16)
+    s.allocate("a", 2)                 # 0-1
+    got = s.allocate("b", 8)           # must start at 8, not 2
+    assert got == tuple(range(8, 16))
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["alloc", "release", "fail",
+                                           "grow", "shrink"]),
+                          st.integers(1, 16)), min_size=1, max_size=60))
+def test_invariants_under_churn(ops):
+    s = SlotScheduler(32)
+    live = {}
+    i = 0
+    for op, n in ops:
+        i += 1
+        if op == "alloc":
+            uid = f"t{i}"
+            got = s.allocate(uid, n)
+            if got is not None:
+                assert len(got) == n
+                # contiguity + alignment
+                assert list(got) == list(range(got[0], got[0] + n))
+                assert got[0] % _align_of(n) == 0
+                # no overlap with any live allocation
+                for other in live.values():
+                    assert not (set(got) & set(other))
+                live[uid] = got
+        elif op == "release" and live:
+            uid = sorted(live)[n % len(live)]
+            s.release(uid)
+            del live[uid]
+        elif op == "fail":
+            victims = s.mark_failed([n % 32])
+            for v in victims:
+                s.release(v)           # agent would fail+release the task
+                live.pop(v, None)
+        elif op == "grow":
+            s.grow(n)
+        elif op == "shrink":
+            s.shrink(n)
+    # capacity accounting: free + busy == capacity
+    assert s.n_free + s.n_busy == s.capacity
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(1, 8), min_size=1, max_size=20))
+def test_liveness_all_tasks_eventually_run(sizes):
+    """Any finite task list completes: allocate/release in waves."""
+    s = SlotScheduler(8)
+    pending = [(f"t{i}", n) for i, n in enumerate(sizes)]
+    done = []
+    for _ in range(1000):
+        if not pending:
+            break
+        still = []
+        for uid, n in pending:
+            got = s.allocate(uid, n)
+            if got is None:
+                still.append((uid, n))
+            else:
+                done.append(uid)
+                s.release(uid)
+        pending = still
+    assert not pending
+
+
+def test_failed_slots_never_reallocated():
+    s = SlotScheduler(8)
+    s.mark_failed([0, 1, 2, 3])
+    got = s.allocate("t", 4)
+    assert got == (4, 5, 6, 7)
+    assert s.allocate("t2", 2) is None  # only failed slots remain
+    s.release("t")
+    assert s.allocate("t3", 4) == (4, 5, 6, 7)

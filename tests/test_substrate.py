@@ -1,0 +1,199 @@
+"""Optimizer, data pipeline, checkpointing, partition rules, MoE dispatch."""
+import os
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.checkpoint.checkpoint import Checkpointer
+from repro.configs import get_config, reduce_config
+from repro.data.pipeline import DataConfig, ShardedLoader, SyntheticCorpus
+from repro.models.moe import _positions, moe_ffn, moe_params_spec
+from repro.optim import AdamW, cosine_schedule
+from repro.sharding.partition import NULL_CTX, PartitionRules
+
+
+# ------------------------------- optimizer ------------------------------ #
+
+def test_adamw_converges_on_quadratic():
+    opt = AdamW(lr=lambda s: 0.1, weight_decay=0.0, clip_norm=100.0)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = opt.update(params, grads, state)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_adamw_grad_clipping():
+    opt = AdamW(lr=lambda s: 1e-3, clip_norm=1.0)
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+    _, _, gnorm = opt.update(params, {"w": jnp.full(3, 1e6)}, state)
+    assert float(gnorm) > 1e5      # reported norm is pre-clip
+
+
+def test_adamw_bf16_states():
+    opt = AdamW(state_dtype="bfloat16")
+    params = {"w": jnp.ones((4, 4), jnp.bfloat16)}
+    st_ = opt.init(params)
+    assert st_.m["w"].dtype == jnp.bfloat16
+    p2, st2, _ = opt.update(params, {"w": jnp.ones((4, 4), jnp.bfloat16)},
+                            st_)
+    assert st2.v["w"].dtype == jnp.bfloat16
+
+
+def test_cosine_schedule():
+    lr = cosine_schedule(1.0, 10, 100)
+    assert float(lr(jnp.int32(0))) == 0.0
+    assert abs(float(lr(jnp.int32(10))) - 1.0) < 1e-6
+    assert float(lr(jnp.int32(100))) < 1e-6
+
+
+# --------------------------------- data --------------------------------- #
+
+def test_corpus_deterministic_and_seekable():
+    c = SyntheticCorpus(DataConfig(vocab_size=1000, seed=7))
+    a = c.tokens_at(0, 5000)
+    b = c.tokens_at(0, 5000)
+    np.testing.assert_array_equal(a, b)
+    # seek: arbitrary offset equals slice of longer read
+    np.testing.assert_array_equal(c.tokens_at(1234, 100), a[1234:1334])
+    assert a.min() >= 1 and a.max() < 1000
+
+
+def test_loader_cursor_resume():
+    cfg = DataConfig(vocab_size=500, seq_len=32, global_batch=2, seed=3)
+    l1 = ShardedLoader(cfg)
+    b1 = next(l1)
+    b2 = next(l1)
+    cur = l1.state()["cursor"]
+    l1.close()
+    # restart from the checkpointed cursor: next batch identical to b3
+    l2 = ShardedLoader(cfg, start_cursor=cur)
+    l1b = ShardedLoader(cfg)
+    next(l1b), next(l1b)
+    b3a = next(l1b)
+    b3b = next(l2)
+    np.testing.assert_array_equal(b3a["tokens"], b3b["tokens"])
+    l2.close()
+    l1b.close()
+
+
+def test_targets_shift_by_one():
+    cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=1, seed=9)
+    l = ShardedLoader(cfg)
+    b = next(l)
+    np.testing.assert_array_equal(b["tokens"][0, 1:], b["targets"][0, :-1])
+    l.close()
+
+
+# ------------------------------ checkpoint ------------------------------ #
+
+def test_checkpoint_roundtrip_bf16(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    tree = {"a": jnp.ones((3, 4), jnp.bfloat16) * 1.5,
+            "b": {"c": jnp.arange(5, dtype=jnp.int32)},
+            "d": np.float64(3.25)}
+    ck.save(7, tree)
+    step, out = ck.restore(tree)
+    assert step == 7
+    np.testing.assert_array_equal(np.asarray(out["a"], np.float32),
+                                  np.asarray(tree["a"], np.float32))
+    np.testing.assert_array_equal(out["b"]["c"], tree["b"]["c"])
+
+
+def test_checkpoint_gc_and_latest(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    t = {"x": jnp.zeros(2)}
+    for s in (1, 2, 3, 4):
+        ck.save(s, t)
+    assert ck.all_steps() == [3, 4]
+    assert ck.latest_step() == 4
+
+
+def test_checkpoint_async_and_atomic(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save_async(1, {"x": jnp.ones(1000)})
+    ck.wait()
+    assert ck.latest_step() == 1
+    assert not list(tmp_path.glob("*.tmp"))
+
+
+def test_checkpoint_structure_mismatch_raises(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, {"x": jnp.zeros(2)})
+    with pytest.raises(ValueError):
+        ck.restore({"x": jnp.zeros(2), "y": jnp.zeros(2)})
+
+
+# ------------------------------ partitioning ----------------------------- #
+
+def test_partition_fallbacks():
+    import os
+    if len(jax.devices()) < 1:
+        pytest.skip("no devices")
+    # synthetic 2D mesh shape check via spec_for on an abstract mesh
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    r = PartitionRules()
+    # degenerate mesh: everything falls back to replicated
+    assert r.spec_for(("vocab", "embed_w"), (1000, 64), mesh) == \
+        jax.sharding.PartitionSpec()
+
+
+def test_partition_divisibility_logic():
+    r = PartitionRules()
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+    m = FakeMesh()
+    # smollm: 15 heads cannot shard on model=16 -> falls to head_dim
+    spec = r.spec_for(("embed_w", "heads", "head_dim"), (960, 15, 64), m)
+    assert tuple(spec) == (("data",) if False else "data", None, "model") or \
+        tuple(spec) == ("data", None, "model")
+    # granite vocab 49155 not divisible by 16 -> replicated vocab dim
+    spec2 = r.spec_for(("vocab", "embed_w"), (49155, 2048), m)
+    assert tuple(spec2) == (None, "data")
+    # qwen kv heads 4 not divisible -> None
+    spec3 = r.spec_for(("embed_w", "kv_heads", "head_dim"), (4096, 4, 64), m)
+    assert tuple(spec3) == ("data", None, "model")
+
+
+# --------------------------------- MoE ----------------------------------- #
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 500))
+def test_moe_positions_property(seed):
+    """Slot positions are unique per expert and dense from 0 (property)."""
+    rng = np.random.default_rng(seed)
+    G, T, K, E = 2, 16, 2, 4
+    idx = jnp.asarray(rng.integers(0, E, size=(G, T, K)))
+    pos = np.asarray(_positions(idx, E, C=T * K))
+    for g in range(G):
+        for e in range(E):
+            got = sorted(pos[g][np.asarray(idx[g]) == e].tolist())
+            assert got == list(range(len(got)))   # dense, unique, from 0
+
+
+def test_moe_einsum_gather_parity():
+    """The zero-FLOP gather dispatch computes the same function as the
+    GShard einsum dispatch."""
+    import dataclasses
+    cfg = reduce_config(get_config("qwen3-moe-235b-a22b"))
+    key = jax.random.PRNGKey(0)
+    d, e, f = cfg.d_model, cfg.num_experts, cfg.d_ff
+    w = {"router": jax.random.normal(key, (d, e)) * 0.02,
+         "wi": jax.random.normal(key, (e, d, f)) * 0.02,
+         "wg": jax.random.normal(key, (e, d, f)) * 0.02,
+         "wo": jax.random.normal(key, (e, f, d)) * 0.02}
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, d))
+    cfg_e = dataclasses.replace(cfg, moe_dispatch="einsum")
+    cfg_g = dataclasses.replace(cfg, moe_dispatch="gather")
+    y1, a1 = moe_ffn(x, w, cfg_e, NULL_CTX)
+    y2, a2 = moe_ffn(x, w, cfg_g, NULL_CTX)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(float(a1), float(a2), rtol=1e-5)
