@@ -26,12 +26,13 @@ import jax.numpy as jnp
 
 from repro.core import (PilotDescription, RPEXExecutor, ResourceSpec,
                         TaskState, translate)
+from repro.compat import shard_map
 
 
 def _noop_spmd(mesh, x):
     # "no-op" MPI function: one tiny collective to force real dispatch
     from jax.sharding import PartitionSpec as P
-    return jax.shard_map(lambda a: jax.lax.psum(a, "data"),
+    return shard_map(lambda a: jax.lax.psum(a, "data"),
                          mesh=mesh, in_specs=P(), out_specs=P())(x)
 
 

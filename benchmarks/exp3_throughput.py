@@ -1,0 +1,228 @@
+"""Experiment 3: runtime overhead of the event-driven agent loop.
+
+Measures per-task runtime overhead on 1k no-op tasks in four settings —
+stream vs bulk submission, 1 vs 2 pilots — and compares the event-driven
+runtime against a faithful reimplementation of the pre-refactor polling
+agent (sleep-poll scheduling loop with ``poll_interval``, thread-per-task
+execution).  The paper's throughput metrics (TPT/TS) are reported alongside
+stream latency, which is where polling hurts: each stream submission used
+to wait out a poll tick before it could even be scheduled.
+
+Emits ``BENCH_throughput.json`` with every measurement plus the headline
+``stream_speedup_vs_polling`` factor (acceptance gate: >= 5x).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import queue
+import threading
+import time
+from pathlib import Path
+
+from repro.core import (PilotDescription, ResourceSpec, RPEXExecutor,
+                        SlotScheduler, translate)
+
+
+def _noop(x):
+    return x
+
+
+# ---------------------- pre-refactor polling baseline ---------------------- #
+
+class PollingBaseline:
+    """The old runtime's control flow, kept for comparison: a scheduling
+    loop that sleeps ``poll_interval`` whenever a pass makes no progress,
+    and a fresh OS thread per task."""
+
+    def __init__(self, n_slots: int, poll_interval: float = 0.002):
+        self.scheduler = SlotScheduler(n_slots)
+        self.poll = poll_interval
+        self.inbox: "queue.Queue" = queue.Queue()
+        self._wait = []
+        self._done = {}
+        self._cv = threading.Condition()
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+
+    def submit(self, uid, fn, args):
+        self.inbox.put((uid, fn, args))
+
+    def _loop(self):
+        while not self._stop.is_set():
+            moved = False
+            try:
+                while True:
+                    self._wait.append(self.inbox.get_nowait())
+                    moved = True
+            except queue.Empty:
+                pass
+            launched = False
+            still = []
+            for uid, fn, args in self._wait:
+                slots = self.scheduler.allocate(uid, 1)
+                if slots is None:
+                    still.append((uid, fn, args))
+                    continue
+                threading.Thread(target=self._run, args=(uid, fn, args),
+                                 daemon=True).start()
+                launched = True
+            self._wait = still
+            if not moved and not launched:
+                time.sleep(self.poll)
+
+    def _run(self, uid, fn, args):
+        result = fn(*args)
+        self.scheduler.release(uid)
+        with self._cv:
+            self._done[uid] = result
+            self._cv.notify_all()
+
+    def wait(self, uid, timeout=30.0):
+        with self._cv:
+            self._cv.wait_for(lambda: uid in self._done, timeout)
+            return self._done.pop(uid)
+
+    def wait_all(self, uids, timeout=60.0):
+        with self._cv:
+            self._cv.wait_for(lambda: all(u in self._done for u in uids),
+                              timeout)
+
+    def close(self):
+        self._stop.set()
+
+
+# ------------------------------ measurements ------------------------------ #
+
+def bench_polling_stream(n_tasks: int, n_slots: int, poll: float) -> float:
+    """Mean submit->complete latency per task, sequential stream."""
+    base = PollingBaseline(n_slots, poll)
+    try:
+        t0 = time.monotonic()
+        for i in range(n_tasks):
+            base.submit(f"t{i}", _noop, (i,))
+            base.wait(f"t{i}")
+        return (time.monotonic() - t0) / n_tasks
+    finally:
+        base.close()
+
+
+def bench_polling_bulk(n_tasks: int, n_slots: int, poll: float) -> float:
+    base = PollingBaseline(n_slots, poll)
+    try:
+        t0 = time.monotonic()
+        for i in range(n_tasks):
+            base.submit(f"t{i}", _noop, (i,))
+        base.wait_all([f"t{i}" for i in range(n_tasks)])
+        return (time.monotonic() - t0) / n_tasks
+    finally:
+        base.close()
+
+
+def _mk_rpex(n_pilots: int, n_slots: int) -> RPEXExecutor:
+    per = max(1, n_slots // n_pilots)
+    return RPEXExecutor([PilotDescription(n_slots=per, name=f"p{i}")
+                         for i in range(n_pilots)])
+
+
+def bench_event_stream(n_tasks: int, n_slots: int, n_pilots: int) -> float:
+    rpex = _mk_rpex(n_pilots, n_slots)
+    try:
+        t0 = time.monotonic()
+        for i in range(n_tasks):
+            t = translate(_noop, (i,), {}, ResourceSpec(slots=1))
+            rpex.tmgr.submit(t)
+            rpex.tmgr.wait(uids=[t.uid], timeout=30)
+        return (time.monotonic() - t0) / n_tasks
+    finally:
+        rpex.shutdown()
+
+
+def bench_event_bulk(n_tasks: int, n_slots: int, n_pilots: int) -> float:
+    rpex = _mk_rpex(n_pilots, n_slots)
+    try:
+        tasks = [translate(_noop, (i,), {}, ResourceSpec(slots=1))
+                 for i in range(n_tasks)]
+        t0 = time.monotonic()
+        rpex.tmgr.submit_bulk(tasks)
+        ok = rpex.tmgr.wait(timeout=120)
+        assert ok, "bulk run timed out"
+        return (time.monotonic() - t0) / n_tasks
+    finally:
+        rpex.shutdown()
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tasks", type=int, default=1000)
+    ap.add_argument("--stream-tasks", type=int, default=150,
+                    help="stream latency sample size (polling pays ~1 poll "
+                         "tick per task, so full 1k would just take longer)")
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--poll-interval", type=float, default=0.002)
+    ap.add_argument("--repeats", type=int, default=5,
+                    help="repeat each stream measurement, keep the best: "
+                         "stream latency is ~3 thread handoffs, so single "
+                         "runs swing 2x with container scheduling noise; "
+                         "min-of-N estimates the floor for both runtimes")
+    ap.add_argument("--min-speedup", type=float, default=0.0,
+                    help="exit nonzero if stream speedup vs the polling "
+                         "baseline falls below this (0 = report only); CI "
+                         "uses a conservative value to catch regressions "
+                         "without flaking on scheduler noise")
+    ap.add_argument("--out", default=str(Path(__file__).parent /
+                                        "artifacts" / "BENCH_throughput.json"))
+    args = ap.parse_args(argv)
+
+    results = {"config": {"tasks": args.tasks,
+                          "stream_tasks": args.stream_tasks,
+                          "slots": args.slots,
+                          "poll_interval": args.poll_interval,
+                          "repeats": args.repeats}}
+
+    def best(fn, *a):
+        return min(fn(*a) for _ in range(max(1, args.repeats)))
+
+    print("# event-driven runtime")
+    for n_pilots in (1, 2):
+        ev_stream = best(bench_event_stream, args.stream_tasks, args.slots,
+                         n_pilots)
+        ev_bulk = bench_event_bulk(args.tasks, args.slots, n_pilots)
+        results[f"event_{n_pilots}p"] = {
+            "stream_us_per_task": ev_stream * 1e6,
+            "bulk_us_per_task": ev_bulk * 1e6,
+            "bulk_tasks_per_s": 1.0 / ev_bulk,
+        }
+        print(f"  {n_pilots} pilot(s): stream {ev_stream * 1e6:9.1f} us/task"
+              f"   bulk {ev_bulk * 1e6:9.1f} us/task"
+              f"   ({1.0 / ev_bulk:,.0f} tasks/s)")
+
+    print("# polling baseline (pre-refactor control flow)")
+    poll_stream = best(bench_polling_stream, args.stream_tasks, args.slots,
+                       args.poll_interval)
+    poll_bulk = bench_polling_bulk(args.tasks, args.slots, args.poll_interval)
+    results["polling"] = {"stream_us_per_task": poll_stream * 1e6,
+                          "bulk_us_per_task": poll_bulk * 1e6}
+    print(f"  stream: {poll_stream * 1e6:9.1f} us/task")
+    print(f"  bulk:   {poll_bulk * 1e6:9.1f} us/task")
+
+    speedup = (results["polling"]["stream_us_per_task"]
+               / results["event_1p"]["stream_us_per_task"])
+    results["stream_speedup_vs_polling"] = speedup
+    print(f"# stream per-task overhead: event-driven is {speedup:.1f}x "
+          f"lower than poll_interval={args.poll_interval}")
+
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(results, indent=2))
+    print(f"wrote {out}")
+    if args.min_speedup and speedup < args.min_speedup:
+        raise SystemExit(
+            f"REGRESSION: stream speedup {speedup:.1f}x < required "
+            f"{args.min_speedup:.1f}x")
+    return results
+
+
+if __name__ == "__main__":
+    main()

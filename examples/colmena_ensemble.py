@@ -19,6 +19,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import (DataFlowKernel, PilotDescription, RPEXExecutor,
                         python_app, spmd_app)
+from repro.compat import shard_map
 
 TRUE_OPT = 1.7
 
@@ -35,7 +36,7 @@ def simulate(mesh, deck):
     objective at deck['x'] (noisy double-well)."""
     x = deck["x"]
     grid = jnp.linspace(x - 0.1, x + 0.1, 4096)
-    f = jax.shard_map(
+    f = shard_map(
         lambda g: jax.lax.pmean(jnp.mean(-(g - TRUE_OPT) ** 2
                                          - 0.05 * jnp.sin(3 * g) ** 2),
                                 "data"),

@@ -1,0 +1,55 @@
+"""Heterogeneous tasks on heterogeneous resources — the paper's central
+claim, end to end.
+
+One RPEXExecutor owns two pilots with distinct descriptions: a "cpu" pilot
+that accepts pure-Python pre/post-processing tasks and a "device" pilot
+that accepts SPMD tasks.  The translator stamps every task's resource
+kind; the TaskManager late-binds each task to the least-loaded compatible
+pilot.  The workflow below is the Colmena shape: per item a Python
+pre-process, an SPMD simulation on a device sub-mesh, and a Python
+collector, with dataflow dependencies between them.
+
+Run: PYTHONPATH=src python examples/heterogeneous_pilots.py
+"""
+import jax.numpy as jnp
+
+from repro.core import (DataFlowKernel, PilotDescription, RPEXExecutor,
+                        python_app, spmd_app)
+
+
+@python_app
+def pre(i):
+    return {"sim_id": i, "scale": 1.0 + 0.1 * i}
+
+
+@spmd_app(slots=2, jit=False)
+def simulate(mesh, spec):
+    x = jnp.ones((64, 64)) * spec["scale"]
+    y = jnp.tanh(x @ x.T / 64.0)
+    return {"sim_id": spec["sim_id"], "energy": float(y.sum())}
+
+
+@python_app
+def collect(results):
+    return sorted((r["sim_id"], round(r["energy"], 3)) for r in results)
+
+
+def main():
+    rpex = RPEXExecutor([
+        PilotDescription(n_slots=4, kinds=("python", "bash"), name="cpu"),
+        PilotDescription(n_slots=8, kinds=("spmd",), name="device"),
+    ])
+    with DataFlowKernel(executors={"rpex": rpex}):
+        sims = [simulate(pre(i)) for i in range(6)]
+        table = collect(sims).result()
+
+    print("collected:", table)
+    for uid, t in rpex.tmgr.tasks.items():
+        print(f"  {uid:<16} kind={t.kind:<7} res_kind={t.res_kind:<7} "
+              f"-> {t.pilot_uid}")
+    print("per-pilot utilization:", rpex.utilization())
+    rpex.shutdown()
+
+
+if __name__ == "__main__":
+    main()

@@ -20,6 +20,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import (DataFlowKernel, PilotDescription, RPEXExecutor,
                         python_app, spmd_app)
+from repro.compat import shard_map
 
 TILE = 90          # reduced 360 -> 90 for the CPU container
 TILES_PER_IMG = 8
@@ -47,7 +48,7 @@ def infer(mesh, payload):
         score = jax.nn.sigmoid(sm.mean(axis=(1, 2)))
         return score
 
-    f = jax.shard_map(per_shard, mesh=mesh,
+    f = shard_map(per_shard, mesh=mesh,
                       in_specs=P("data"), out_specs=P("data"))
     return {"image_id": payload["image_id"],
             "scores": np.asarray(f(tiles))}

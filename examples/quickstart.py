@@ -13,6 +13,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import (DataFlowKernel, PilotDescription, RPEXExecutor,
                         bash_app, python_app, spmd_app)
+from repro.compat import shard_map
 
 
 @python_app
@@ -24,7 +25,7 @@ def make_params(scale):
 def parallel_norm(mesh, params, n):
     """An 'MPI function': collective sum over the task's private sub-mesh."""
     x = jnp.arange(float(n)) * params["scale"]
-    return jax.shard_map(lambda a: jax.lax.psum(jnp.sum(a * a), "data"),
+    return shard_map(lambda a: jax.lax.psum(jnp.sum(a * a), "data"),
                          mesh=mesh, in_specs=P("data"), out_specs=P())(x)
 
 

@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Tier-1 verification: the whole test suite must collect and pass.
+# Usage: scripts/ci.sh [extra pytest args...]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+python -m pytest -q "$@"
+
+# runtime micro-benchmark smoke (fast settings; the full run is
+# `python benchmarks/exp3_throughput.py`)
+if [[ "${CI_BENCH:-0}" == "1" ]]; then
+    python benchmarks/exp3_throughput.py --tasks 200 --stream-tasks 50
+fi

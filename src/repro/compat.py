@@ -1,0 +1,28 @@
+"""Version-compatibility shims for the jax API surface this repo uses.
+
+``jax.shard_map`` was promoted out of ``jax.experimental`` only in newer
+jax releases, and its replication-check kwarg was renamed ``check_rep`` ->
+``check_vma`` along the way.  Import ``shard_map`` from here so the same
+code (written against the new spelling) runs on both sides of the
+promotion.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+try:
+    shard_map = jax.shard_map
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+    if "check_vma" in inspect.signature(_legacy_shard_map).parameters:
+        shard_map = _legacy_shard_map
+    else:
+        def shard_map(f, *args, check_vma=None, **kwargs):
+            if check_vma is not None:
+                kwargs.setdefault("check_rep", check_vma)
+            return _legacy_shard_map(f, *args, **kwargs)
+
+__all__ = ["shard_map"]

@@ -11,7 +11,8 @@ from .dfk import DataFlowKernel, current_dfk
 from .executors import Executor, ParslTask, ThreadPoolExecutor
 from .futures import (AppFuture, ResourceSpec, TaskRecord, TaskState,
                       new_uid)
-from .pilot import Pilot, PilotDescription, PilotManager, TaskManager
+from .pilot import (Pilot, PilotDescription, PilotManager, PilotPool,
+                    TaskManager)
 from .rpex import RPEXExecutor
 from .scheduler import SlotScheduler
 from .spmd_executor import SPMDFunctionExecutor
@@ -20,7 +21,7 @@ from .translator import bind_future, detect_kind, translate
 
 __all__ = [
     "Agent", "AppFuture", "DataFlowKernel", "Executor", "ParslTask",
-    "Pilot", "PilotDescription", "PilotManager", "RPEXExecutor",
+    "Pilot", "PilotDescription", "PilotManager", "PilotPool", "RPEXExecutor",
     "ResourceSpec", "SPMDFunctionExecutor", "SlotScheduler", "StateStore",
     "TaskManager", "TaskRecord", "TaskState", "ThreadPoolExecutor",
     "bash_app", "bind_future", "current_dfk", "detect_kind", "new_uid",

@@ -1,15 +1,28 @@
-"""Agent — the RP Agent analog: scheduler loop + dispatcher on the pilot.
+"""Agent — the RP Agent analog: event-driven scheduler loop + worker pool.
 
-A single scheduling thread pulls translated tasks from the inbox into a
-priority/FIFO wait queue, allocates slot blocks (with bounded backfill:
-later small tasks may run ahead of a blocked large task, never starving it),
-and hands each scheduled task to a worker thread (the MPI-Master/Worker
-analog) that drives the SPMD executor.  A separate monitor thread implements
-straggler mitigation (soft-deadline replicas) and retry-on-failure.
+The runtime is allocation-driven, not clock-driven: a single scheduling
+thread sleeps on a condition variable and is woken only by events that can
+change schedulability — task submission, slot release (via the scheduler's
+listener hook), elastic grow, retry requeue, or shutdown.  There is no
+polling sleep anywhere on the submit -> schedule -> run -> complete path.
 
-All state transitions are timestamped through the StateStore so the
-Fig.6-style utilization breakdown (Scheduled/Launching/Running/Idle) can be
-integrated offline.
+Scheduled tasks are executed by a *persistent* worker pool (the
+MPI-Master/Worker analog): workers are spawned lazily up to ``max_workers``
+and then live for the agent's lifetime, pulling from a ready queue, so the
+hot path pays one queue handoff instead of an OS thread spawn per task.
+
+Scheduling keeps the priority/FIFO wait heap with bounded backfill (later
+small tasks may run ahead of a blocked large task, never starving it).  A
+separate monitor thread implements straggler mitigation (soft-deadline
+replicas) and retry-on-failure; it waits on the stop event rather than
+sleeping, so shutdown is prompt.
+
+``shutdown(wait=True)`` is an event wait on the outstanding-task counter —
+it returns as soon as the agent drains (immediately when idle).
+
+All state transitions are timestamped through the StateStore's unified
+event stream so the Fig.6-style utilization breakdown (Scheduled/Launching/
+Running/Idle) can be integrated offline.
 """
 from __future__ import annotations
 
@@ -17,13 +30,15 @@ import heapq
 import queue
 import threading
 import time
-import traceback
+from collections import deque
 from typing import Callable, Dict, List, Optional, Tuple
 
 from .futures import TERMINAL, ResourceSpec, TaskRecord, TaskState, new_uid
 from .scheduler import SlotScheduler
 from .spmd_executor import SPMDFunctionExecutor
 from .store import StateStore
+
+_SENTINEL = object()
 
 
 class Agent:
@@ -34,29 +49,43 @@ class Agent:
                  backfill_window: int = 16,
                  straggler_factor: float = 3.0,
                  straggler_min_samples: int = 5,
-                 poll_interval: float = 0.002):
+                 monitor_interval: float = 0.02,
+                 poll_interval: Optional[float] = None):
         self.scheduler = scheduler
         self.executor = executor
         self.store = store or StateStore()
+        self.max_workers = max_workers
         self.backfill_window = backfill_window
         self.straggler_factor = straggler_factor
         self.straggler_min_samples = straggler_min_samples
-        self.poll = poll_interval
+        # poll_interval is accepted for backward compatibility; the loop is
+        # event-driven, so it only scales the straggler-monitor cadence.
+        self.monitor_interval = (poll_interval * 10 if poll_interval
+                                 else monitor_interval)
 
-        self.inbox: "queue.Queue[TaskRecord]" = queue.Queue()
+        self._cv = threading.Condition()
         self._wait: List[Tuple[int, int, TaskRecord]] = []   # heap
         self._seq = 0
         self._running: Dict[str, TaskRecord] = {}
         self._replicas: Dict[str, str] = {}                  # replica -> orig
         self._done_cb: Dict[str, Callable] = {}
-        self._durations: List[float] = []
-        self._lock = threading.Lock()
+        # recent durations only: the p95 straggler deadline needs the last
+        # ~100 samples, not an unbounded re-sorted history
+        self._durations: "deque[float]" = deque(maxlen=256)
+        self._outstanding = 0       # submitted, not yet terminal
+        self._dirty = False         # a wake event arrived for the loop
         self._stop = threading.Event()
-        self._sem = threading.Semaphore(max_workers)
-        self._threads: List[threading.Thread] = []
+
+        self._ready: "queue.SimpleQueue" = queue.SimpleQueue()
+        self._workers: List[threading.Thread] = []
+        self._ready_count = 0       # dispatched, not yet claimed by a worker
+        self._executing = 0         # claimed by a worker, still running
+        self._demand_slots = 0      # slots of all outstanding tasks (O(1)
+                                    # routing load metric)
         self._sched_thread = threading.Thread(target=self._loop, daemon=True)
         self._mon_thread = threading.Thread(target=self._monitor, daemon=True)
         self._started = False
+        self.scheduler.add_listener(self._on_capacity)
 
     # ------------------------------ api -------------------------------- #
     def start(self):
@@ -67,68 +96,114 @@ class Agent:
         return self
 
     def submit(self, task: TaskRecord, done_cb: Optional[Callable] = None):
-        if done_cb is not None:
-            self._done_cb[task.uid] = done_cb
-        self.inbox.put(task)
+        with self._cv:
+            if done_cb is not None:
+                self._done_cb[task.uid] = done_cb
+            self._outstanding += 1
+            self._demand_slots += task.resources.slots
+            # fast path: nothing waiting and slots available — allocate in
+            # the submitting thread and hand straight to a worker, skipping
+            # the scheduler-thread handoff (one fewer context switch on the
+            # hot submit->run path; priority order is vacuous on an empty
+            # queue, so semantics are unchanged)
+            if not self._wait and not self._stop.is_set():
+                slots = self.scheduler.allocate(task.uid,
+                                                task.resources.slots)
+                if slots is not None:
+                    task.slot_ids = slots
+                    task.transition(TaskState.SCHEDULED, self.store)
+                    self._running[task.uid] = task
+                    self._dispatch(task)
+                    return
+            heapq.heappush(self._wait,
+                           (-task.resources.priority, self._seq, task))
+            self._seq += 1
+            self._dirty = True
+            self._cv.notify_all()
 
     def submit_bulk(self, tasks, done_cb: Optional[Callable] = None):
-        """Bulk submission (the paper's named future work): one inbox
-        operation for a whole batch, cutting per-task queue overhead."""
-        for t in tasks:
-            if done_cb is not None:
-                self._done_cb[t.uid] = done_cb
-        for t in tasks:
-            self.inbox.put(t)
+        """Bulk submission (the paper's named future work): one lock
+        acquisition and one wakeup for a whole batch, cutting per-task
+        submission overhead."""
+        with self._cv:
+            for t in tasks:
+                self._enqueue(t, done_cb)
+            self._cv.notify_all()
+
+    def _enqueue(self, task: TaskRecord, done_cb: Optional[Callable]):
+        """Caller holds self._cv."""
+        if done_cb is not None:
+            self._done_cb[task.uid] = done_cb
+        heapq.heappush(self._wait,
+                       (-task.resources.priority, self._seq, task))
+        self._seq += 1
+        self._outstanding += 1
+        self._demand_slots += task.resources.slots
+        self._dirty = True
 
     def shutdown(self, wait: bool = True, timeout: float = 60.0):
         if wait:
-            deadline = time.monotonic() + timeout
-            while time.monotonic() < deadline:
-                with self._lock:
-                    idle = not self._wait and not self._running
-                if idle and self.inbox.empty():
-                    break
-                time.sleep(self.poll)
-        self._stop.set()
+            with self._cv:
+                self._cv.wait_for(lambda: self._outstanding == 0, timeout)
+        with self._cv:
+            # set under the cv so the submit fast path can never observe
+            # "not stopped", then spawn a worker after the sentinel count
+            # below is read — no worker is ever left without a sentinel
+            self._stop.set()
+            self._cv.notify_all()
+        if self._started:
+            self._sched_thread.join(timeout=5.0)   # no more dispatches after
+            self._mon_thread.join(timeout=5.0)
+        for _ in range(len(self._workers)):
+            self._ready.put(_SENTINEL)
 
     def inject_slot_failure(self, slots):
         """Simulate node failure: victims are FAILED then retried elsewhere."""
         victims = self.scheduler.mark_failed(slots)
-        with self._lock:
+        with self._cv:
             for uid in victims:
                 t = self._running.get(uid)
                 if t is not None:
                     t.error = RuntimeError(f"slot failure on {slots}")
         return victims
 
-    # --------------------------- scheduling ----------------------------- #
-    def _loop(self):
-        while not self._stop.is_set():
-            moved = False
-            try:
-                while True:
-                    t = self.inbox.get_nowait()
-                    with self._lock:
-                        heapq.heappush(self._wait,
-                                       (-t.resources.priority, self._seq, t))
-                        self._seq += 1
-                    moved = True
-            except queue.Empty:
-                pass
-            launched = self._try_schedule()
-            if not moved and not launched:
-                time.sleep(self.poll)
+    def load(self) -> int:
+        """Slot demand (queued + running) — the PilotPool routing metric.
+        An O(1) counter read, maintained at submit/terminal transitions."""
+        with self._cv:
+            return self._demand_slots
 
-    def _try_schedule(self) -> bool:
-        launched = False
-        with self._lock:
+    # --------------------------- scheduling ----------------------------- #
+    def _on_capacity(self):
+        """Scheduler listener: slots were released or grown — wake the loop."""
+        with self._cv:
+            self._dirty = True
+            self._cv.notify_all()
+
+    def _loop(self):
+        while True:
+            with self._cv:
+                while not self._dirty and not self._stop.is_set():
+                    self._cv.wait()
+                if self._stop.is_set():
+                    return
+                self._dirty = False
+            self._schedule_pass()
+
+    def _schedule_pass(self):
+        with self._cv:
             window = []
             rest = []
+            launched = False
             while self._wait and len(window) < self.backfill_window:
                 window.append(heapq.heappop(self._wait))
             for item in window:
                 _, _, t = item
                 if t.state in TERMINAL:      # canceled while queued
+                    self._outstanding -= 1
+                    self._demand_slots -= t.resources.slots
+                    if self._outstanding == 0:
+                        self._cv.notify_all()
                     continue
                 slots = self.scheduler.allocate(t.uid, t.resources.slots)
                 if slots is None:
@@ -137,75 +212,125 @@ class Agent:
                 t.slot_ids = slots
                 t.transition(TaskState.SCHEDULED, self.store)
                 self._running[t.uid] = t
-                th = threading.Thread(target=self._run_task, args=(t,),
-                                      daemon=True)
-                self._threads.append(th)
-                th.start()
+                self._dispatch(t)
                 launched = True
             for item in rest:
                 heapq.heappush(self._wait, item)
-        return launched
+            if launched and self._wait:
+                # progress was made and work remains: run another pass (a
+                # blocked-only pass instead waits for a capacity event)
+                self._dirty = True
+
+    def _dispatch(self, task: TaskRecord):
+        """Hand a scheduled task to the worker pool.  Caller holds self._cv.
+        The pool grows until it covers all claimed work (executing + queued
+        ready), so tasks scheduled in one pass run concurrently."""
+        self._ready_count += 1
+        want = self._executing + self._ready_count
+        if len(self._workers) < min(self.max_workers, want):
+            th = threading.Thread(target=self._worker, daemon=True)
+            self._workers.append(th)
+            th.start()
+        self._ready.put(task)
 
     # ---------------------------- execution ----------------------------- #
-    def _run_task(self, task: TaskRecord):
-        with self._sem:
-            task.transition(TaskState.LAUNCHING, self.store)
+    def _worker(self):
+        """Persistent pool worker (the MPI-Worker analog)."""
+        while True:
+            item = self._ready.get()
+            if item is _SENTINEL:
+                return
+            with self._cv:
+                self._ready_count -= 1
+                self._executing += 1
             try:
-                if task.kind == "spmd":
-                    # materialize the sub-mesh + specialized callable now so
-                    # LAUNCHING captures compile cost (the ibrun analog)...
-                    mesh = self.executor.submesh(task.slot_ids,
-                                                 task.resources.mesh_shape)
-                task.transition(TaskState.RUNNING, self.store)
-                t0 = time.monotonic()
-                result = self.executor.execute(task)
-                dt = time.monotonic() - t0
-                if task.error is not None:     # slot failed mid-flight
-                    raise task.error
-                task.result = result
-                self._finish(task, TaskState.DONE, dt)
-            except BaseException as e:   # noqa: BLE001 — agent must survive
-                task.error = e
-                self._finish(task, TaskState.FAILED, None)
+                self._run_task(item)
+            finally:
+                with self._cv:
+                    self._executing -= 1
+
+    def _run_task(self, task: TaskRecord):
+        task.transition(TaskState.LAUNCHING, self.store)
+        try:
+            if task.kind == "spmd":
+                # materialize the sub-mesh + specialized callable now so
+                # LAUNCHING captures compile cost (the ibrun analog)...
+                mesh = self.executor.submesh(task.slot_ids,
+                                             task.resources.mesh_shape)
+            task.transition(TaskState.RUNNING, self.store)
+            t0 = time.monotonic()
+            result = self.executor.execute(task)
+            dt = time.monotonic() - t0
+            if task.error is not None:     # slot failed mid-flight
+                raise task.error
+            task.result = result
+            self._finish(task, TaskState.DONE, dt)
+        except BaseException as e:   # noqa: BLE001 — agent must survive
+            task.error = e
+            self._finish(task, TaskState.FAILED, None)
 
     def _finish(self, task: TaskRecord, state: TaskState, duration):
-        self.scheduler.release(task.uid)
-        with self._lock:
+        self.scheduler.release(task.uid)      # fires _on_capacity listener
+        with self._cv:
             self._running.pop(task.uid, None)
             if duration is not None:
                 self._durations.append(duration)
             orig_uid = self._replicas.pop(task.uid, None)
+
+        if task.state == TaskState.CANCELED:
+            # a replica already answered for this task and canceled it —
+            # don't retry, don't overwrite CANCELED, don't re-fire callbacks
+            self._settle(task)
+            return
 
         if state == TaskState.FAILED and task.retries < task.max_retries:
             task.retries += 1
             task.error = None
             task.slot_ids = ()
             task.transition(TaskState.TRANSLATED, self.store)
-            self.inbox.put(task)
+            with self._cv:                    # requeue keeps it outstanding
+                heapq.heappush(self._wait,
+                               (-task.resources.priority, self._seq, task))
+                self._seq += 1
+                self._dirty = True
+                self._cv.notify_all()
             return
 
-        # replica bookkeeping: first finisher wins, loser is canceled
+        # replica bookkeeping: first finisher wins, loser is canceled.  A
+        # failed replica must NOT consume the original's callback — the
+        # original is still running and will resolve its future itself.
         if orig_uid is not None:
-            cb = self._done_cb.pop(orig_uid, None)
-            with self._lock:
-                orig = self._running.get(orig_uid)
-            if state == TaskState.DONE and cb is not None:
+            if state == TaskState.DONE:
+                cb = self._done_cb.pop(orig_uid, None)
+                with self._cv:
+                    orig = self._running.get(orig_uid)
                 task.transition(state, self.store)
-                cb(task)
+                if cb is not None:
+                    cb(task)
                 if orig is not None:
                     orig.transition(TaskState.CANCELED, self.store)
-                return
-            task.transition(state, self.store)
+            else:
+                task.transition(state, self.store)
+            self._settle(task)
             return
 
         task.transition(state, self.store)
         cb = self._done_cb.pop(task.uid, None)
         if cb is not None:
             cb(task)
+        self._settle(task)
+
+    def _settle(self, task: TaskRecord):
+        """One submitted record reached a terminal state."""
+        with self._cv:
+            self._outstanding -= 1
+            self._demand_slots -= task.resources.slots
+            if self._outstanding == 0:
+                self._cv.notify_all()
 
     # ----------------------------- monitor ------------------------------ #
     def _deadline(self) -> Optional[float]:
-        with self._lock:
+        with self._cv:
             if len(self._durations) < self.straggler_min_samples:
                 return None
             xs = sorted(self._durations)[-100:]
@@ -213,13 +338,14 @@ class Agent:
             return p95 * self.straggler_factor
 
     def _monitor(self):
-        while not self._stop.is_set():
-            time.sleep(self.poll * 10)
+        # stop-event wait, not a sleep: exits promptly on shutdown and never
+        # touches the submit->schedule->complete path.
+        while not self._stop.wait(self.monitor_interval):
             dl = self._deadline()
             if dl is None:
                 continue
             now = time.monotonic()
-            with self._lock:
+            with self._cv:
                 candidates = [
                     t for t in self._running.values()
                     if t.state == TaskState.RUNNING
@@ -232,13 +358,13 @@ class Agent:
                     uid=new_uid("replica"), kind=t.kind, fn=t.fn,
                     args=t.args, kwargs=t.kwargs, resources=t.resources,
                     replica_of=t.uid)
-                with self._lock:
+                with self._cv:
                     self._replicas[rep.uid] = t.uid
                 rep.transition(TaskState.TRANSLATED, self.store)
-                self.inbox.put(rep)
+                self.submit(rep)
 
     # ------------------------------ stats ------------------------------- #
     def utilization_timeline(self):
-        """Per-task state intervals for the Fig.6-style breakdown."""
-        return {uid: dict(t.timestamps)
-                for uid, t in list(self._running.items())}
+        """Per-task state intervals for the Fig.6-style breakdown, derived
+        from the StateStore's unified event stream."""
+        return self.store.timeline()

@@ -77,7 +77,7 @@ class DataFlowKernel:
         self._lock = threading.Lock()
         self._invocation_idx: Dict[str, int] = {}
         self._pending_bulk: Dict[str, List[Tuple[ParslTask, AppFuture]]] = {}
-        self._flusher: Optional[threading.Timer] = None
+        self._flushers: Dict[str, threading.Timer] = {}   # per executor
         self.tasks: Dict[str, TaskRecord] = {}   # DAG nodes
         self.edges: List[Tuple[str, str]] = []   # (producer, consumer)
         self.t_start = time.monotonic()
@@ -117,12 +117,19 @@ class DataFlowKernel:
         future = AppFuture(node)
         self.tasks[node.uid] = node
 
-        # replay from journal (workflow-level restart)
-        ex = self.executors[executor or getattr(fn, "__executor__", None)
-                            or self.default_executor]
-        store = getattr(getattr(ex, "pilot", None), "store", None)
-        if key is not None and store is not None:
-            found, result = store.completed_result(key)
+        # the executor-kind hint: explicit arg > app decorator > default
+        label = (executor or getattr(fn, "__executor__", None)
+                 or self.default_executor)
+        ex = self.executors[label]
+
+        # replay from journal (workflow-level restart); a multi-pilot
+        # executor exposes completed_result over every pilot's journal
+        lookup = getattr(ex, "completed_result", None)
+        if lookup is None:
+            store = getattr(getattr(ex, "pilot", None), "store", None)
+            lookup = store.completed_result if store is not None else None
+        if key is not None and lookup is not None:
+            found, result = lookup(key)
             if found:
                 node.result = result
                 node.transition(TaskState.DONE)
@@ -145,7 +152,8 @@ class DataFlowKernel:
                 if not future.done():
                     future.set_exception(e)
                 return
-            pt = ParslTask(fn, r_args, r_kwargs, node.resources, retries, key)
+            pt = ParslTask(fn, r_args, r_kwargs, node.resources, retries, key,
+                           executor=label)
             node.transition(TaskState.TRANSLATED)
             self._dispatch(ex, pt, future)
 
@@ -169,26 +177,35 @@ class DataFlowKernel:
     # ------------------------------- bulk -------------------------------- #
     def _dispatch(self, ex: Executor, pt: ParslTask, future: AppFuture):
         if self.bulk and ex.supports_bulk:
+            label = pt.executor or ex.label
             with self._lock:
-                self._pending_bulk.setdefault(ex.label, []).append((pt, future))
-                if self._flusher is None:
-                    self._flusher = threading.Timer(self.bulk_window,
-                                                    self.flush)
-                    self._flusher.daemon = True
-                    self._flusher.start()
+                self._pending_bulk.setdefault(label, []).append((pt, future))
+                if label not in self._flushers:
+                    t = threading.Timer(self.bulk_window, self.flush, [label])
+                    t.daemon = True
+                    self._flushers[label] = t
+                    t.start()
         else:
             ex.submit(pt, future)
 
-    def flush(self):
+    def flush(self, executor: Optional[str] = None):
+        """Flush pending bulk batches — all executors, or just one.  Safe to
+        call concurrently per executor: each label's batch is popped under
+        the lock, so a timer flush and an explicit flush never double-submit
+        and one executor's flush never blocks another's."""
         with self._lock:
-            pending = self._pending_bulk
-            self._pending_bulk = {}
-            if self._flusher is not None:
-                self._flusher.cancel()
-                self._flusher = None
-        for label, pairs in pending.items():
-            if pairs:
-                self.executors[label].submit_bulk(pairs)
+            labels = ([executor] if executor is not None
+                      else list(self._pending_bulk))
+            batches = {}
+            for label in labels:
+                pairs = self._pending_bulk.pop(label, [])
+                if pairs:
+                    batches[label] = pairs
+                timer = self._flushers.pop(label, None)
+                if timer is not None:
+                    timer.cancel()
+        for label, pairs in batches.items():
+            self.executors[label].submit_bulk(pairs)
 
     # ------------------------------ graph ------------------------------- #
     def dag(self):

@@ -12,16 +12,20 @@ from .translator import bind_future, translate
 
 
 class ParslTask:
-    """What the DFK hands an executor: the app + resolved args."""
+    """What the DFK hands an executor: the app + resolved args, plus the
+    executor-kind hint the DFK resolved for it (threaded through so bulk
+    batches and pilot routing can see where the task was bound)."""
 
-    __slots__ = ("fn", "args", "kwargs", "resources", "retries", "key")
+    __slots__ = ("fn", "args", "kwargs", "resources", "retries", "key",
+                 "executor")
 
     def __init__(self, fn, args, kwargs, resources=None, retries=0,
-                 key: Optional[str] = None):
+                 key: Optional[str] = None, executor: Optional[str] = None):
         self.fn, self.args, self.kwargs = fn, args, kwargs
         self.resources = resources
         self.retries = retries
         self.key = key
+        self.executor = executor
 
 
 class Executor:

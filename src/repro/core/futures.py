@@ -51,6 +51,8 @@ class ResourceSpec:
     cpu_only: bool = False          # pre/post-processing helper tasks
     walltime: Optional[float] = None
     priority: int = 0
+    res_kind: Optional[str] = None  # resource class for pilot routing
+                                    # ("cpu" | "device"); None = inferred
 
     def __post_init__(self):
         if self.slots < 1:
@@ -80,6 +82,10 @@ class TaskRecord:
     max_retries: int = 0
     slot_ids: Tuple[int, ...] = ()
     replica_of: Optional[str] = None
+    res_kind: Optional[str] = None  # stamped by the translator
+    app_kind: Optional[str] = None  # pre-translation kind (bash apps run
+                                    # as kind="python" but route as "bash")
+    pilot_uid: Optional[str] = None  # late-bound by PilotPool routing
 
     def transition(self, state: TaskState, store=None):
         self.state = state

@@ -5,13 +5,21 @@ lifetime — on a real cluster, a jax.distributed slice; here, the process's
 device set, virtualized into slots).  TaskManager submits translated tasks
 to a pilot's Agent and tracks their futures.  The separation mirrors RP:
 managers run client-side, the Agent runs "on the resource".
+
+Heterogeneous resources enter through the PilotPool: a pool owns N pilots
+with distinct PilotDescriptions (e.g. a CPU pilot for pre/post-processing
+Python tasks and a device pilot for SPMD tasks).  Each description may
+restrict the task kinds it accepts; the TaskManager *late-binds* every
+translated task to the least-loaded compatible pilot at submission time —
+the paper's "heterogeneous tasks on heterogeneous resources" claim made
+operational.
 """
 from __future__ import annotations
 
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple, Union
 
 import jax
 
@@ -31,11 +39,15 @@ class PilotDescription:
     cache_executables: bool = True
     backfill_window: int = 16
     straggler_factor: float = 3.0
+    kinds: Optional[Tuple[str, ...]] = None  # accepted task/resource kinds
+                                             # (e.g. ("python", "bash") or
+                                             # ("spmd",)); None = accept all
+    name: Optional[str] = None        # human-readable pilot label
 
 
 class Pilot:
     def __init__(self, desc: PilotDescription, uid: Optional[str] = None):
-        self.uid = uid or new_uid("pilot")
+        self.uid = uid or new_uid(desc.name or "pilot")
         self.desc = desc
         devices = desc.devices if desc.devices is not None else jax.devices()
         n = desc.n_slots or len(devices)
@@ -48,12 +60,31 @@ class Pilot:
                            backfill_window=desc.backfill_window,
                            straggler_factor=desc.straggler_factor).start()
         self.t_start = time.monotonic()
+        self.store.record_event("PILOT_START", pilot=self.uid, n_slots=n,
+                                kinds=list(desc.kinds or ()) or None)
+
+    # routing ----------------------------------------------------------- #
+    def accepts(self, task: TaskRecord) -> bool:
+        """Compatible iff the description accepts the task's kind, its
+        pre-translation app kind (bash apps execute as kind="python"), or
+        its stamped resource kind (None = accepts everything)."""
+        if self.desc.kinds is None:
+            return True
+        return any(k is not None and k in self.desc.kinds
+                   for k in (task.kind, task.app_kind, task.res_kind))
+
+    def load(self) -> float:
+        """Demanded slots (queued + running) / capacity — the least-loaded
+        routing metric."""
+        return self.agent.load() / max(1, self.scheduler.capacity)
 
     # elastic scaling --------------------------------------------------- #
     def grow(self, n_slots: int):
+        self.store.record_event("GROW", pilot=self.uid, n=n_slots)
         return self.scheduler.grow(n_slots)
 
     def shrink(self, n_slots: int):
+        self.store.record_event("SHRINK", pilot=self.uid, n=n_slots)
         return self.scheduler.shrink(n_slots)
 
     @property
@@ -65,6 +96,80 @@ class Pilot:
         self.store.close()
 
 
+class PilotPool:
+    """N pilots with heterogeneous descriptions + kind-aware late binding."""
+
+    def __init__(self,
+                 descs: Optional[Sequence[PilotDescription]] = None,
+                 pilots: Optional[Sequence[Pilot]] = None):
+        if pilots is None and descs is None:
+            descs = [PilotDescription()]
+        self.pilots: List[Pilot] = (list(pilots) if pilots is not None
+                                    else [Pilot(d) for d in descs])
+        if not self.pilots:
+            raise ValueError("PilotPool needs at least one pilot")
+        self._closed = False
+
+    def __len__(self):
+        return len(self.pilots)
+
+    def by_uid(self, uid: str) -> Optional[Pilot]:
+        return next((p for p in self.pilots if p.uid == uid), None)
+
+    def _compatible(self, task: TaskRecord) -> List[Pilot]:
+        compat = [p for p in self.pilots if p.accepts(task)]
+        if not compat:
+            raise RuntimeError(
+                f"no pilot accepts task {task.uid} "
+                f"(kind={task.kind!r}, res_kind={task.res_kind!r}; pool "
+                f"kinds={[p.desc.kinds for p in self.pilots]!r})")
+        return compat
+
+    def route(self, task: TaskRecord) -> Pilot:
+        """Least-loaded pilot whose description accepts the task."""
+        return min(self._compatible(task), key=lambda p: p.load())
+
+    def route_bulk(self, tasks: Sequence[TaskRecord]
+                   ) -> List[Union[Pilot, Exception]]:
+        """Greedy least-loaded assignment for a whole batch: the running
+        load estimate includes the demand routed earlier in this batch, so
+        a bulk submission spreads across compatible pilots instead of
+        piling onto whichever was idle when the batch arrived.  An
+        unroutable task yields its RuntimeError in place of a pilot, so
+        one bad task never aborts the rest of the batch."""
+        loads = {p.uid: p.load() for p in self.pilots}
+        caps = {p.uid: max(1, p.scheduler.capacity) for p in self.pilots}
+        out: List[Union[Pilot, Exception]] = []
+        for t in tasks:
+            try:
+                p = min(self._compatible(t), key=lambda p: loads[p.uid])
+            except RuntimeError as e:
+                out.append(e)
+                continue
+            loads[p.uid] += t.resources.slots / caps[p.uid]
+            out.append(p)
+        return out
+
+    def utilization(self) -> Dict[str, float]:
+        """Per-pilot busy-slot fraction, keyed by pilot uid."""
+        return {p.uid: p.scheduler.utilization() for p in self.pilots}
+
+    def events(self) -> List[dict]:
+        """Unified event stream merged across all pilots' stores."""
+        out = []
+        for p in self.pilots:
+            for e in p.store.events:
+                out.append({**e, "pilot": e.get("pilot") or p.uid})
+        return sorted(out, key=lambda e: e["t"])
+
+    def close(self):
+        if self._closed:
+            return
+        self._closed = True
+        for p in self.pilots:
+            p.close()
+
+
 class PilotManager:
     def __init__(self):
         self.pilots: Dict[str, Pilot] = {}
@@ -73,6 +178,12 @@ class PilotManager:
         p = Pilot(desc)
         self.pilots[p.uid] = p
         return p
+
+    def submit_pilots(self, descs: Sequence[PilotDescription]) -> PilotPool:
+        pool = PilotPool(descs=descs)
+        for p in pool.pilots:
+            self.pilots[p.uid] = p
+        return pool
 
     def cancel(self, uid: str):
         p = self.pilots.pop(uid, None)
@@ -85,57 +196,108 @@ class PilotManager:
 
 
 class TaskManager:
-    """Submits task descriptions to a pilot's agent; tracks completion."""
+    """Routes task descriptions to pilots' agents; tracks completion with a
+    single condition variable (an event wait, not a per-task poll)."""
 
-    def __init__(self, pilot: Pilot):
-        self.pilot = pilot
+    def __init__(self, pool: Union[PilotPool, Pilot]):
+        if isinstance(pool, Pilot):
+            pool = PilotPool(pilots=[pool])
+        self.pool = pool
         self.tasks: Dict[str, TaskRecord] = {}
-        self._events: Dict[str, threading.Event] = {}
+        self._cv = threading.Condition()
+        self._done: Set[str] = set()
+        self._outstanding = 0
 
-    def submit(self, task: TaskRecord,
-               done_cb: Optional[Callable] = None) -> TaskRecord:
-        self.tasks[task.uid] = task
-        ev = threading.Event()
-        self._events[task.uid] = ev
+    @property
+    def pilot(self) -> Pilot:
+        """The primary pilot (single-pilot compatibility accessor)."""
+        return self.pool.pilots[0]
 
+    # ---------------------------- submission ---------------------------- #
+    def _completion_cb(self, done_cb: Optional[Callable]):
         def _cb(t: TaskRecord):
-            ev.set()
+            uid = t.uid if t.replica_of is None else t.replica_of
+            with self._cv:
+                if uid not in self._done:
+                    self._done.add(uid)
+                    self._outstanding -= 1
+                    self._cv.notify_all()
             if done_cb is not None:
                 done_cb(t)
+        return _cb
 
-        task.transition(TaskState.TRANSLATED, self.pilot.store)
-        self.pilot.agent.submit(task, done_cb=_cb)
+    def _bind(self, task: TaskRecord,
+              workflow_key: Optional[str] = None,
+              pilot: Optional[Pilot] = None) -> Pilot:
+        """Late-bind a task to the least-loaded compatible pilot."""
+        pilot = pilot if pilot is not None else self.pool.route(task)
+        task.pilot_uid = pilot.uid
+        self.tasks[task.uid] = task
+        pilot.store.record_event("ROUTED", uid=task.uid, pilot=pilot.uid,
+                                 kind=task.kind)
+        if workflow_key is not None:
+            pilot.store.record(task, workflow_key=workflow_key)
+        return pilot
+
+    def _fail_unroutable(self, task: TaskRecord, err: Exception,
+                         done_cb: Optional[Callable]):
+        """Resolve an unroutable task as FAILED through its callback — the
+        submit path may run in a flush timer or dependency callback thread
+        where a raised exception would be swallowed and hang the future."""
+        task.error = err
+        self.tasks[task.uid] = task
+        task.transition(TaskState.FAILED)
+        with self._cv:
+            self._done.add(task.uid)
+            self._cv.notify_all()        # a wait(uids=[...]) may be parked
+        if done_cb is not None:
+            done_cb(task)
+
+    def submit(self, task: TaskRecord,
+               done_cb: Optional[Callable] = None,
+               workflow_key: Optional[str] = None) -> TaskRecord:
+        try:
+            pilot = self.pool.route(task)
+        except RuntimeError as e:
+            self._fail_unroutable(task, e, done_cb)
+            return task
+        self._bind(task, workflow_key, pilot=pilot)
+        with self._cv:
+            self._outstanding += 1
+        task.transition(TaskState.TRANSLATED, pilot.store)
+        pilot.agent.submit(task, done_cb=self._completion_cb(done_cb))
         return task
 
     def submit_bulk(self, tasks: List[TaskRecord],
-                    done_cb: Optional[Callable] = None) -> List[TaskRecord]:
-        for t in tasks:
-            self.tasks[t.uid] = t
-            ev = threading.Event()
-            self._events[t.uid] = ev
-            t.transition(TaskState.TRANSLATED, self.pilot.store)
-        if done_cb is None:
-            self.pilot.agent.submit_bulk(tasks,
-                                         done_cb=lambda t: self._events[
-                                             t.uid if t.replica_of is None
-                                             else t.replica_of].set())
-        else:
-            def _cb(t: TaskRecord):
-                uid = t.uid if t.replica_of is None else t.replica_of
-                self._events[uid].set()
-                done_cb(t)
-            self.pilot.agent.submit_bulk(tasks, done_cb=_cb)
+                    done_cb: Optional[Callable] = None,
+                    workflow_keys: Optional[Dict[str, str]] = None
+                    ) -> List[TaskRecord]:
+        """One agent submission per pilot for a whole batch."""
+        per_pilot: Dict[str, Tuple[Pilot, List[TaskRecord]]] = {}
+        routed = 0
+        for t, pilot in zip(tasks, self.pool.route_bulk(tasks)):
+            if isinstance(pilot, Exception):
+                self._fail_unroutable(t, pilot, done_cb)
+                continue
+            self._bind(t, (workflow_keys or {}).get(t.uid), pilot=pilot)
+            per_pilot.setdefault(pilot.uid, (pilot, []))[1].append(t)
+            t.transition(TaskState.TRANSLATED, pilot.store)
+            routed += 1
+        with self._cv:
+            self._outstanding += routed
+        cb = self._completion_cb(done_cb)
+        for pilot, batch in per_pilot.values():
+            pilot.agent.submit_bulk(batch, done_cb=cb)
         return tasks
 
+    # ------------------------------ waiting ------------------------------ #
     def wait(self, uids=None, timeout: Optional[float] = None) -> bool:
-        uids = uids if uids is not None else list(self._events)
-        deadline = None if timeout is None else time.monotonic() + timeout
-        for uid in uids:
-            ev = self._events.get(uid)
-            if ev is None:
-                continue
-            t = None if deadline is None else max(0.0,
-                                                  deadline - time.monotonic())
-            if not ev.wait(t):
-                return False
-        return True
+        """Block until the given (default: all) tasks complete — a single
+        condition-variable wait, not a per-task Event scan."""
+        with self._cv:
+            if uids is None:
+                return self._cv.wait_for(lambda: self._outstanding == 0,
+                                         timeout)
+            want = [u for u in uids if u in self.tasks]
+            return self._cv.wait_for(
+                lambda: all(u in self._done for u in want), timeout)

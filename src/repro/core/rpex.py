@@ -5,53 +5,77 @@ A Parsl-style executor that bootstraps the pilot runtime on initialization
 task through the Task Translator, and reflects pilot task states back into
 AppFutures.  Supports both the paper's stream submission (one by one, as
 Parsl's DFK emits tasks) and the bulk mode the paper names as future work.
+
+One RPEXExecutor may own *several* pilots (a PilotPool) with heterogeneous
+descriptions — e.g. a CPU pilot for pure-Python pre/post-processing and a
+device pilot for SPMD tasks.  The translator stamps each task's resource
+kind and the TaskManager late-binds it to the least-loaded compatible
+pilot, so one executor serves heterogeneous tasks on heterogeneous
+resources (the paper's central claim).
 """
 from __future__ import annotations
 
 import threading
-from typing import List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple, Union
 
 from .executors import Executor, ParslTask
 from .futures import AppFuture, TaskState
-from .pilot import Pilot, PilotDescription, PilotManager, TaskManager
+from .pilot import (Pilot, PilotDescription, PilotManager, PilotPool,
+                    TaskManager)
 from .translator import bind_future, translate
+
+Descs = Union[PilotDescription, Sequence[PilotDescription]]
 
 
 class RPEXExecutor(Executor):
     label = "rpex"
     supports_bulk = True
 
-    def __init__(self, pilot_desc: Optional[PilotDescription] = None,
-                 pilot: Optional[Pilot] = None):
+    def __init__(self, pilot_desc: Optional[Descs] = None,
+                 pilot: Optional[Pilot] = None,
+                 pilots: Optional[Sequence[Pilot]] = None):
         # "Once initialized, RPEX ... starts a new RP session and creates
         # the Pilot Manager and the Task Manager."
-        self._own_pilot = pilot is None
-        if pilot is None:
+        self._own_pilots = pilot is None and pilots is None
+        if self._own_pilots:
+            if pilot_desc is None:
+                descs = [PilotDescription()]
+            elif isinstance(pilot_desc, PilotDescription):
+                descs = [pilot_desc]
+            else:
+                descs = list(pilot_desc)
             self.pmgr = PilotManager()
-            self.pilot = self.pmgr.submit_pilot(
-                pilot_desc or PilotDescription())
+            self.pool = self.pmgr.submit_pilots(descs)
         else:
             self.pmgr = None
-            self.pilot = pilot
-        self.tmgr = TaskManager(self.pilot)
+            self.pool = PilotPool(
+                pilots=list(pilots) if pilots is not None else [pilot])
+        self.tmgr = TaskManager(self.pool)
         self.overhead_events: List[Tuple[str, float]] = []
+
+    @property
+    def pilot(self) -> Pilot:
+        """Primary pilot (single-pilot compatibility accessor)."""
+        return self.pool.pilots[0]
 
     # ------------------------------------------------------------------ #
     def submit(self, ptask: ParslTask, future: AppFuture):
         task = translate(ptask.fn, ptask.args, ptask.kwargs,
                          ptask.resources, ptask.retries)
         future.task = task
-        self.pilot.store.record(task, workflow_key=ptask.key)
-        self.tmgr.submit(task, done_cb=bind_future(task, future))
+        self.tmgr.submit(task, done_cb=bind_future(task, future),
+                         workflow_key=ptask.key)
 
     def submit_bulk(self, pairs: List[Tuple[ParslTask, AppFuture]]):
         tasks = []
+        keys = {}
         cbs = {}
         for pt, fut in pairs:
             task = translate(pt.fn, pt.args, pt.kwargs, pt.resources,
                              pt.retries)
             fut.task = task
-            self.pilot.store.record(task, workflow_key=pt.key)
+            if pt.key is not None:
+                keys[task.uid] = pt.key
             cbs[task.uid] = bind_future(task, fut)
             tasks.append(task)
 
@@ -61,12 +85,28 @@ class RPEXExecutor(Executor):
             if f is not None:
                 f(t)
 
-        self.tmgr.submit_bulk(tasks, done_cb=cb)
+        self.tmgr.submit_bulk(tasks, done_cb=cb, workflow_keys=keys)
 
     # ------------------------------------------------------------------ #
+    def completed_result(self, workflow_key: str):
+        """(found, result) across every pilot's journal — the DFK restart
+        lookup for a multi-pilot executor."""
+        for p in self.pool.pilots:
+            found, result = p.store.completed_result(workflow_key)
+            if found:
+                return True, result
+        return False, None
+
+    def utilization(self):
+        """Per-pilot busy-slot fraction (unified event stream backs the
+        offline Fig.6-style breakdown; see StateStore.utilization)."""
+        return self.pool.utilization()
+
     def drain(self, timeout: Optional[float] = None) -> bool:
         return self.tmgr.wait(timeout=timeout)
 
     def shutdown(self):
-        if self._own_pilot and self.pmgr is not None:
-            self.pmgr.close()
+        if self._own_pilots:
+            self.pool.close()
+            if self.pmgr is not None:
+                self.pmgr.pilots.clear()

@@ -7,6 +7,17 @@ TPU sub-slice with intact ICI neighborhoods (the analogue of giving each MPI
 Intra-communicator a compact node set), and alignment prevents the
 fragmentation that would otherwise strand capacity under churn.
 
+The free set is kept as a sorted list of disjoint, coalesced [start, end)
+intervals (a buddy-style free-block list) instead of a flat slot set, so an
+allocation probe touches O(#blocks) aligned candidates rather than scanning
+every slot of the extent — the difference between O(blocks) and O(extent)
+per allocate under the churn the agent loop generates.
+
+The scheduler is also the wakeup source for the event-driven agent loop:
+``add_listener`` registers a callback fired (outside the scheduler lock)
+whenever capacity may have increased — release or grow — so a blocked
+scheduling pass waits on its condition variable instead of polling.
+
 Invariants (property-tested in tests/test_scheduler.py):
   * an allocated slot is never allocated to a second task until released
   * allocations never include failed or shrunk-away slots
@@ -17,8 +28,9 @@ Invariants (property-tested in tests/test_scheduler.py):
 """
 from __future__ import annotations
 
+import bisect
 import threading
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 
 def _align_of(n: int) -> int:
@@ -35,36 +47,110 @@ class SlotScheduler:
         self._lock = threading.Lock()
         self.capacity = n_slots          # includes busy, excludes failed
         self._extent = n_slots           # highest slot id ever + 1
-        self._free: Set[int] = set(range(n_slots))
-        self._failed: Set[int] = set()
+        self._blocks: List[List[int]] = [[0, n_slots]]  # sorted [start, end)
+        self._failed: set = set()
         self._busy: Dict[str, Tuple[int, ...]] = {}   # uid -> slots
+        self._listeners: List[Callable[[], None]] = []
+
+    # ---------------------------- listeners ---------------------------- #
+    def add_listener(self, cb: Callable[[], None]):
+        """Register a capacity-increase callback (release/grow).  Fired
+        outside the scheduler lock so listeners may take their own locks."""
+        with self._lock:
+            self._listeners.append(cb)
+
+    def _notify(self):
+        for cb in list(self._listeners):
+            cb()
+
+    # --------------------------- free blocks --------------------------- #
+    def _insert_free(self, start: int, end: int):
+        """Insert [start, end) into the block list, coalescing neighbors.
+        Caller holds the lock."""
+        if start >= end:
+            return
+        i = bisect.bisect_left(self._blocks, [start, end])
+        # merge with predecessor
+        if i > 0 and self._blocks[i - 1][1] == start:
+            i -= 1
+            self._blocks[i][1] = end
+        else:
+            self._blocks.insert(i, [start, end])
+        # merge with successor
+        if i + 1 < len(self._blocks) and self._blocks[i][1] == \
+                self._blocks[i + 1][0]:
+            self._blocks[i][1] = self._blocks[i + 1][1]
+            del self._blocks[i + 1]
+
+    def _carve(self, i: int, start: int, end: int):
+        """Remove [start, end) from block i.  Caller holds the lock."""
+        b0, b1 = self._blocks[i]
+        repl = []
+        if b0 < start:
+            repl.append([b0, start])
+        if end < b1:
+            repl.append([end, b1])
+        self._blocks[i:i + 1] = repl
+
+    def _remove_free_slot(self, s: int) -> bool:
+        """Drop a single free slot; True if it was free.  Caller holds
+        the lock."""
+        i = bisect.bisect_right(self._blocks, [s, float("inf")]) - 1
+        if i >= 0 and self._blocks[i][0] <= s < self._blocks[i][1]:
+            self._carve(i, s, s + 1)
+            return True
+        return False
 
     # ------------------------------ alloc ------------------------------ #
     def allocate(self, uid: str, n: int) -> Optional[Tuple[int, ...]]:
-        """Contiguous aligned first-fit; returns slot ids or None."""
+        """Contiguous aligned first-fit over free blocks; slot ids or None."""
         if n < 1:
             raise ValueError("n >= 1")
         align = _align_of(n)
         with self._lock:
             if uid in self._busy:
                 raise KeyError(f"{uid} already holds an allocation")
-            start = 0
-            while start + n <= self._extent:
-                block = range(start, start + n)
-                if all(s in self._free for s in block):
-                    slots = tuple(block)
-                    self._free.difference_update(slots)
+            for i, (b0, b1) in enumerate(self._blocks):
+                start = -(-b0 // align) * align     # first aligned start
+                if start + n <= b1:
+                    slots = tuple(range(start, start + n))
+                    self._carve(i, start, start + n)
                     self._busy[uid] = slots
                     return slots
-                start += align
             return None
+
+    def largest_free_block(self) -> int:
+        """Largest aligned request guaranteed to succeed right now."""
+        with self._lock:
+            best = 0
+            for b0, b1 in self._blocks:
+                a = 1
+                while True:
+                    start = -(-b0 // a) * a
+                    if start + a > b1:
+                        break
+                    best = max(best, a)
+                    a *= 2
+            return best
 
     def release(self, uid: str):
         with self._lock:
             slots = self._busy.pop(uid, ())
-            for s in slots:
-                if s not in self._failed and s < self._extent:
-                    self._free.add(s)
+            freed = False
+            run_start = None
+            prev = None
+            for s in list(slots) + [None]:      # sentinel flushes last run
+                ok = (s is not None and s not in self._failed
+                      and s < self._extent)
+                if ok and run_start is None:
+                    run_start = s
+                elif not ok and run_start is not None:
+                    self._insert_free(run_start, prev + 1)
+                    freed = True
+                    run_start = None
+                prev = s
+        if freed:
+            self._notify()
 
     def owner_of(self, slot: int) -> Optional[str]:
         with self._lock:
@@ -83,8 +169,7 @@ class SlotScheduler:
                 if s in self._failed:
                     continue
                 self._failed.add(s)
-                if s in self._free:
-                    self._free.discard(s)
+                if self._remove_free_slot(s):
                     self.capacity -= 1
                 else:
                     for uid, held in self._busy.items():
@@ -97,17 +182,25 @@ class SlotScheduler:
     def grow(self, n: int) -> Tuple[int, ...]:
         with self._lock:
             new = tuple(range(self._extent, self._extent + n))
-            self._free.update(new)
+            self._insert_free(self._extent, self._extent + n)
             self._extent += n
             self.capacity += n
-            return new
+        self._notify()
+        return new
 
     def shrink(self, n: int) -> Tuple[int, ...]:
-        """Retire up to n FREE slots (never preempts running tasks)."""
+        """Retire up to n FREE slots (never preempts running tasks),
+        highest slot ids first."""
         with self._lock:
-            victims = sorted(self._free, reverse=True)[:n]
+            victims = []
+            for b in reversed(self._blocks):
+                while len(victims) < n and b[1] > b[0]:
+                    b[1] -= 1
+                    victims.append(b[1])
+                if len(victims) >= n:
+                    break
+            self._blocks = [b for b in self._blocks if b[1] > b[0]]
             for s in victims:
-                self._free.discard(s)
                 self._failed.add(s)     # retired == out of service
                 self.capacity -= 1
             return tuple(victims)
@@ -116,7 +209,7 @@ class SlotScheduler:
     @property
     def n_free(self) -> int:
         with self._lock:
-            return len(self._free)
+            return sum(b1 - b0 for b0, b1 in self._blocks)
 
     @property
     def n_busy(self) -> int:
@@ -125,6 +218,6 @@ class SlotScheduler:
 
     def utilization(self) -> float:
         with self._lock:
-            total = len(self._free) + sum(len(v) for v in self._busy.values())
-            return (sum(len(v) for v in self._busy.values()) / total
-                    if total else 0.0)
+            busy = sum(len(v) for v in self._busy.values())
+            total = sum(b1 - b0 for b0, b1 in self._blocks) + busy
+            return busy / total if total else 0.0

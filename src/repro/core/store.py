@@ -6,6 +6,13 @@ in-process store with a JSON-lines journal on disk.  The journal gives the
 workflow layer crash-consistent restart: a restarted DFK replays DONE tasks
 (futures resolve immediately from recorded results when re-submitted with
 the same workflow key) and resubmits in-flight ones.
+
+Beyond the per-task latest-state map, the store keeps a *unified event
+stream*: every task transition and every runtime event (pilot start, route
+decision, elastic resize) is appended as one timestamped record.  The
+stream replaces the ad-hoc per-component timestamp dicts the runtime used
+to keep — per-pilot utilization (the paper's Fig. 6 Scheduled/Launching/
+Running/Idle breakdown) is integrated directly from it.
 """
 from __future__ import annotations
 
@@ -14,9 +21,12 @@ import os
 import threading
 import time
 from pathlib import Path
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional
 
 from .futures import TaskRecord, TaskState
+
+_RUN_STATES = ("SCHEDULED", "LAUNCHING", "RUNNING")
+_END_STATES = ("DONE", "FAILED", "CANCELED")
 
 
 class StateStore:
@@ -24,6 +34,7 @@ class StateStore:
         self.journal_path = Path(journal_path) if journal_path else None
         self._lock = threading.Lock()
         self.tasks: Dict[str, dict] = {}
+        self.events: List[dict] = []        # unified, append-only stream
         self._fh = None
         if self.journal_path:
             self.journal_path.parent.mkdir(parents=True, exist_ok=True)
@@ -40,6 +51,13 @@ class StateStore:
                     continue        # torn tail write from a crash
                 self.tasks[rec["uid"]] = rec
 
+    # ------------------------------ events ------------------------------ #
+    def record_event(self, event: str, **fields):
+        """Append a non-task runtime event (pilot start, routing, resize)."""
+        rec = {"event": event, "t": time.monotonic(), **fields}
+        with self._lock:
+            self.events.append(rec)
+
     def record(self, task: TaskRecord, workflow_key: Optional[str] = None):
         rec = {
             "uid": task.uid,
@@ -50,6 +68,8 @@ class StateStore:
             "slot_ids": list(task.slot_ids),
             "t": time.time(),
         }
+        if task.pilot_uid is not None:
+            rec["pilot"] = task.pilot_uid
         if task.state == TaskState.DONE and _jsonable(task.result):
             rec["result"] = task.result
         if task.error is not None:
@@ -59,9 +79,16 @@ class StateStore:
             if "key" not in rec or rec["key"] is None:
                 rec["key"] = prev.get("key")
             self.tasks[task.uid] = {**prev, **rec}
+            self.events.append({
+                "event": "STATE", "uid": task.uid,
+                "state": task.state.value, "t": time.monotonic(),
+                "slots": len(task.slot_ids) or 1,
+                "pilot": task.pilot_uid,
+            })
             if self._fh:
                 self._fh.write(json.dumps(self.tasks[task.uid]) + "\n")
 
+    # ------------------------------ queries ----------------------------- #
     def completed_result(self, workflow_key: str):
         """(found, result) for a previously-DONE task with this key."""
         with self._lock:
@@ -75,6 +102,55 @@ class StateStore:
     def states(self) -> Dict[str, str]:
         with self._lock:
             return {uid: r.get("state", "?") for uid, r in self.tasks.items()}
+
+    def timeline(self) -> Dict[str, Dict[str, float]]:
+        """{uid: {state: monotonic_t}} reconstructed from the event stream
+        (first occurrence of each state wins, matching TaskRecord stamps)."""
+        out: Dict[str, Dict[str, float]] = {}
+        with self._lock:
+            for e in self.events:
+                if e.get("event") != "STATE":
+                    continue
+                ts = out.setdefault(e["uid"], {})
+                ts.setdefault(e["state"], e["t"])
+        return out
+
+    def utilization(self, capacity: int,
+                    t0: Optional[float] = None,
+                    t1: Optional[float] = None) -> Dict[str, float]:
+        """Fig. 6 breakdown from the event stream: fraction of slot-seconds
+        in Scheduled / Launching / Running / Idle over [t0, t1]."""
+        slots: Dict[str, int] = {}
+        with self._lock:
+            events = [e for e in self.events if e.get("event") == "STATE"]
+        for e in events:
+            slots[e["uid"]] = max(slots.get(e["uid"], 1), e.get("slots", 1))
+        tl = self.timeline()
+        if not tl:
+            return {"Scheduled": 0.0, "Launching": 0.0, "Running": 0.0,
+                    "Idle": 1.0}
+        all_t = [t for ts in tl.values() for t in ts.values()]
+        t0 = t0 if t0 is not None else min(all_t)
+        t1 = t1 if t1 is not None else max(all_t)
+        occ = {"Scheduled": 0.0, "Launching": 0.0, "Running": 0.0}
+        for uid, ts in tl.items():
+            n = slots.get(uid, 1)
+            if "SCHEDULED" in ts and "LAUNCHING" in ts:
+                occ["Scheduled"] += n * (ts["LAUNCHING"] - ts["SCHEDULED"])
+            if "LAUNCHING" in ts and "RUNNING" in ts:
+                occ["Launching"] += n * (ts["RUNNING"] - ts["LAUNCHING"])
+            # earliest terminal stamp: a retried task records FAILED before
+            # its eventual DONE, and crediting through the requeue wait
+            # would overcount Running
+            ends = [ts[s] for s in _END_STATES if s in ts]
+            if "RUNNING" in ts and ends:
+                occ["Running"] += n * max(0.0, min(ends) - ts["RUNNING"])
+        total = max(capacity * (t1 - t0), 1e-12)
+        scale = min(1.0, total / max(sum(occ.values()), 1e-12))
+        occ = {k: v * scale for k, v in occ.items()}
+        out = {k: v / total for k, v in occ.items()}
+        out["Idle"] = max(0.0, 1.0 - sum(out.values()))
+        return out
 
     def close(self):
         if self._fh:

@@ -57,7 +57,10 @@ def translate(fn: Callable, args: tuple, kwargs: dict,
         kwargs["_jit"] = False
     task = TaskRecord(
         uid=new_uid("task"), kind=kind, fn=body, args=args, kwargs=kwargs,
-        resources=res, max_retries=max_retries)
+        resources=res, max_retries=max_retries,
+        app_kind=detect_kind(fn),
+        res_kind=res.res_kind or (
+            "device" if kind == "spmd" and not res.cpu_only else "cpu"))
     task.transition(TaskState.NEW)
     return task
 

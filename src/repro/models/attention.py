@@ -17,6 +17,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from .layers import apply_rope, softcap
+from ..compat import shard_map
 
 NEG_INF = -1e30
 
@@ -284,7 +285,7 @@ def sharded_flash_attention(mesh, q, k, v, *, window: int = 0,
 
     if strategy in ("local", "kv_heads"):
         hspec = "model" if strategy == "kv_heads" else None
-        fn = jax.shard_map(
+        fn = shard_map(
             lambda q_, k_, v_: blockwise_attention(
                 q_, k_, v_, zero, True, window, attn_softcap),
             mesh=mesh,
@@ -303,7 +304,7 @@ def sharded_flash_attention(mesh, q, k, v, *, window: int = 0,
             return blockwise_attention(q_, k1, v1, zero, True, window,
                                        attn_softcap)
 
-        fn = jax.shard_map(
+        fn = shard_map(
             local, mesh=mesh,
             in_specs=(P(bspec, None, "model", None),
                       P(bspec, None, None, None), P(bspec, None, None, None)),
@@ -318,7 +319,7 @@ def sharded_flash_attention(mesh, q, k, v, *, window: int = 0,
         return blockwise_attention(q_, k_, v_, off, True, window,
                                    attn_softcap)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local, mesh=mesh,
         in_specs=(P(bspec, "model", None, None),
                   P(bspec, None, None, None), P(bspec, None, None, None)),
@@ -401,7 +402,7 @@ def sharded_decode_attention(mesh, q, k_cache, v_cache, kx, vx, pos, *,
 
     cache_spec = P(bspec, seqspec, hspec, dspec)
     new_spec = P(bspec, None, hspec, dspec)
-    fn = jax.shard_map(
+    fn = shard_map(
         local, mesh=mesh,
         in_specs=(new_spec, cache_spec, cache_spec, new_spec, new_spec, P()),
         out_specs=(new_spec, cache_spec, cache_spec), check_vma=False)

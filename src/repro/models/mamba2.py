@@ -16,6 +16,7 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+from ..compat import shard_map
 
 
 def mamba_params_spec(cfg):
@@ -84,7 +85,7 @@ def sharded_ssd(mesh, x, dt, A, B_, C_, chunk: int, use_pallas: bool = False,
     hspec = "model" if (M > 1 and H % M == 0) else None
     if bspec is None and hspec is None:
         return ssd_chunked(x, dt, A, B_, C_, chunk, use_pallas)
-    fn = jax.shard_map(
+    fn = shard_map(
         lambda x_, dt_, A_, b_, c_: ssd_chunked(x_, dt_, A_, b_, c_, chunk,
                                                 use_pallas),
         mesh=mesh,

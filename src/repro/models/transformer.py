@@ -26,6 +26,27 @@ from .mamba2 import MambaCache, mamba_layer, mamba_params_spec
 from .moe import moe_ffn, moe_params_spec
 
 
+# ------------------------ differentiable barrier ------------------------ #
+
+@jax.custom_vjp
+def _pin(x):
+    """``optimization_barrier`` with a VJP: the stock primitive has no
+    differentiation rule, so pin the forward residual and the backward
+    cotangent explicitly (the barrier must survive AD for remat to work)."""
+    return jax.lax.optimization_barrier(x)
+
+
+def _pin_fwd(x):
+    return jax.lax.optimization_barrier(x), None
+
+
+def _pin_bwd(_, g):
+    return (jax.lax.optimization_barrier(g),)
+
+
+_pin.defvjp(_pin_fwd, _pin_bwd)
+
+
 # --------------------------- layer program ----------------------------- #
 
 def layer_program(cfg) -> List[Tuple[str, str]]:
@@ -252,7 +273,7 @@ def forward(cfg, params, embeds, *, mode: str = "train",
         # Barrier pins the scan residual to the bf16 carry itself: without
         # it XLA CSEs rms_norm's f32 upcast into the saved residual,
         # doubling layer-boundary checkpoint memory.
-        x = jax.lax.optimization_barrier(x)
+        x = _pin(x)
         new_caches = []
         aux_total = jnp.zeros((), jnp.float32)
         for j in range(p):

@@ -1,0 +1,77 @@
+"""Minimal hypothesis stand-in so property tests run where hypothesis is
+not installed.
+
+Implements exactly the strategy surface this suite uses — ``integers``,
+``lists``, ``tuples``, ``sampled_from`` — plus ``given``/``settings``.
+Examples are generated from a fixed seed per example index, so runs are
+deterministic and a falsifying example is reproducible.  When hypothesis is
+available the real library is used instead (see the try/except import in
+each test module); this shim is a fallback, not a replacement — it does no
+shrinking and no coverage-guided generation.
+"""
+from __future__ import annotations
+
+import functools
+import random
+from types import SimpleNamespace
+
+_DEFAULT_EXAMPLES = 100
+_SEED = 0xC0FFEE
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def _sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda r: r.choice(elements))
+
+
+def _tuples(*strategies):
+    return _Strategy(lambda r: tuple(s.draw(r) for s in strategies))
+
+
+def _lists(elements, min_size=0, max_size=None):
+    hi = max_size if max_size is not None else min_size + 10
+
+    def draw(r):
+        return [elements.draw(r) for _ in range(r.randint(min_size, hi))]
+    return _Strategy(draw)
+
+
+st = SimpleNamespace(integers=_integers, sampled_from=_sampled_from,
+                     tuples=_tuples, lists=_lists)
+
+
+def given(*strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+            for i in range(n):
+                rng = random.Random(_SEED + i)
+                example = [s.draw(rng) for s in strategies]
+                try:
+                    fn(*args, *example, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example #{i}: {example!r}") from e
+        # pytest must see the zero-arg wrapper signature, not the wrapped
+        # function's generated parameters (it would hunt for fixtures)
+        del wrapper.__wrapped__
+        wrapper._max_examples = _DEFAULT_EXAMPLES
+        return wrapper
+    return deco
+
+
+def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco

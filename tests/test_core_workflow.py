@@ -92,11 +92,13 @@ def test_failure_propagates_downstream(rpex):
 def test_spmd_submesh_collective(rpex):
     from jax.sharding import PartitionSpec as P
 
+    from repro.compat import shard_map
+
     @spmd_app(slots=4)
     def psum_task(mesh, x):
         arr = jnp.arange(8.0) * x
-        f = jax.shard_map(lambda a: jax.lax.psum(a.sum(), "data"),
-                          mesh=mesh, in_specs=P("data"), out_specs=P())
+        f = shard_map(lambda a: jax.lax.psum(a.sum(), "data"),
+                      mesh=mesh, in_specs=P("data"), out_specs=P())
         return f(arr)
 
     with DataFlowKernel(executors={"rpex": rpex}):

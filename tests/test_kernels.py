@@ -1,11 +1,15 @@
 """Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles,
 plus hypothesis property tests on the SSD recurrence."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:                      # fall back to the vendored shim
+    from _propshim import given, settings, st
 
 from repro.kernels import ops
 from repro.kernels.ref import (attention_reference, ssd_reference,

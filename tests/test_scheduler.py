@@ -1,6 +1,9 @@
 """Property tests for the device-slot scheduler (RP Agent analog)."""
-import hypothesis.strategies as st
-from hypothesis import given, settings
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:                      # fall back to the vendored shim
+    from _propshim import given, settings, st
 
 from repro.core.scheduler import SlotScheduler, _align_of
 
@@ -91,6 +94,20 @@ def test_liveness_all_tasks_eventually_run(sizes):
                 s.release(uid)
         pending = still
     assert not pending
+
+
+def test_largest_free_block_always_allocatable():
+    """The documented no-lost-capacity invariant: any request up to the
+    largest aligned free block must succeed."""
+    s = SlotScheduler(16)
+    s.allocate("a", 2)
+    s.allocate("b", 4)
+    s.release("a")
+    n = s.largest_free_block()
+    assert n == 8                      # [8, 16) is free and aligned
+    assert s.allocate("c", n) is not None
+    assert s.largest_free_block() == 4  # [0, 4): b was aligned to slot 4
+    assert s.allocate("d", 4) == (0, 1, 2, 3)
 
 
 def test_failed_slots_never_reallocated():

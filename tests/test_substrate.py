@@ -1,12 +1,16 @@
 """Optimizer, data pipeline, checkpointing, partition rules, MoE dispatch."""
 import os
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:                      # fall back to the vendored shim
+    from _propshim import given, settings, st
 
 from repro.checkpoint.checkpoint import Checkpointer
 from repro.configs import get_config, reduce_config
