@@ -12,8 +12,11 @@ on a device block; per-image 2-stage dataflow, many images concurrent.
 
 Metrics exactly as defined in §V:
   TTX           — total time to execution (includes idle/wait);
-  RP overhead   — runtime-system time: slot scheduling + launch
-                  (SCHEDULED->RUNNING across tasks) + agent startup;
+  RP overhead   — runtime-system time: the wall-clock union of
+                  SCHEDULED->RUNNING intervals from the unified StateStore
+                  event stream (per-task sums double-counted concurrent
+                  launches and retries, and implied overhead during
+                  slot-idle gaps between dependent tasks);
   RPEX overhead — RP overhead + Parsl-side time (DFK DAG build, dependency
                   resolution, submission, shutdown).
 
@@ -31,7 +34,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (DataFlowKernel, PilotDescription, RPEXExecutor,
-                        python_app, spmd_app, TaskState)
+                        overhead_from_events, python_app, spmd_app,
+                        TaskState)
 
 
 def _mk_apps(sim_slots: int, sim_ms: float):
@@ -121,17 +125,13 @@ def run_colmena(n_slots, n_iters, sim_slots, sim_ms, bulk, repeats=3):
             util = utilization_breakdown(tasks, n_slots, t0, t1)
         t_end = time.monotonic()
         ttx = t1 - t0
-        # RP overhead: scheduling+launching time across tasks (slot-time the
-        # runtime spent before RUNNING) + agent start
-        rp_oh = sum((t.timestamps.get("RUNNING", 0) -
-                     t.timestamps.get("SCHEDULED", 0))
-                    for t in tasks if "RUNNING" in t.timestamps
-                    and "SCHEDULED" in t.timestamps)
+        # RP overhead recomputed from the unified event stream: wall-clock
+        # union of SCHEDULED->RUNNING intervals (no double-counting of
+        # concurrent launches, no phantom overhead while slots idle
+        # between dependent tasks)
+        rp_oh = overhead_from_events(rpex.pool.events())
         # RPEX overhead: RP + DFK side (submit/DAG/shutdown wall time beyond
         # task execution)
-        run_time = sum((t.timestamps.get("DONE", t.timestamps.get(
-            "FAILED", 0)) - t.timestamps.get("RUNNING", 0))
-            for t in tasks if "RUNNING" in t.timestamps)
         rpex_oh = rp_oh + max(0.0, (t_end - t_init) - ttx)
         rows.append((ttx, rp_oh, rpex_oh, util))
         rpex.shutdown()
@@ -161,10 +161,7 @@ def run_iwp(n_slots, n_images, tile_slots, infer_ms, bulk, repeats=3):
             util = utilization_breakdown(tasks, n_slots, t0, t1)
         t_end = time.monotonic()
         ttx = t1 - t0
-        rp_oh = sum((t.timestamps.get("RUNNING", 0) -
-                     t.timestamps.get("SCHEDULED", 0))
-                    for t in tasks if "RUNNING" in t.timestamps
-                    and "SCHEDULED" in t.timestamps)
+        rp_oh = overhead_from_events(rpex.pool.events())
         rpex_oh = rp_oh + max(0.0, (t_end - t_init) - ttx)
         rows.append((ttx, rp_oh, rpex_oh, util))
         rpex.shutdown()

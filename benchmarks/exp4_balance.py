@@ -1,0 +1,161 @@
+"""Experiment 4: inter-pilot load balance — work stealing + elastic pool.
+
+Phase 1 (stealing vs. PR-1 static routing): a skewed bulk workload on two
+identical pilots.  Bulk routing is least-loaded by *demand*, so a batch of
+interleaved long/short tasks splits evenly by count — but all the long
+tasks land on one pilot and all the short ones on the other.  Under PR-1
+static routing the short-task pilot finishes early and idles while the
+long-task pilot grinds through its queue; with stealing enabled the idle
+pilot migrates queued long tasks over and the makespan drops toward the
+balanced optimum.
+
+Phase 2 (elastic autoscale cycle): one seed pilot plus a PoolScaler; a
+burst overloads the seed, the scaler spawns a pilot from the template
+(PILOT_START), stealing moves the backlog (STOLEN), and after the burst
+the spawned pilot drains and retires (PILOT_RETIRE) — the full steal/scale
+cycle is asserted from PilotPool.events().
+
+Emits ``BENCH_balance.json``; ``--min-speedup`` turns the phase-1 makespan
+ratio into a regression gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+from repro.core import (PilotDescription, RPEXExecutor, ScalerConfig,
+                        translate)
+
+
+def _sleeper(dur):
+    time.sleep(dur)
+    return dur
+
+
+def skewed_durations(n_tasks: int, long_s: float, short_s: float):
+    """Alternating long/short: bulk routing alternates pilots on equal
+    load, so evens (long) pile onto pilot 0 and odds (short) onto 1."""
+    return [long_s if i % 2 == 0 else short_s for i in range(n_tasks)]
+
+
+def run_balance(n_tasks: int, long_s: float, short_s: float,
+                steal: bool) -> dict:
+    rpex = RPEXExecutor([PilotDescription(n_slots=2, name="p0"),
+                         PilotDescription(n_slots=2, name="p1")],
+                        steal=steal)
+    try:
+        tasks = [translate(_sleeper, (d,), {})
+                 for d in skewed_durations(n_tasks, long_s, short_s)]
+        t0 = time.monotonic()
+        rpex.tmgr.submit_bulk(tasks)
+        ok = rpex.tmgr.wait(timeout=120)
+        makespan = time.monotonic() - t0
+        assert ok, "workload timed out"
+        events = rpex.pool.events()
+        stolen = sum(1 for e in events if e["event"] == "STOLEN")
+        per_pilot = {}
+        for t in tasks:
+            per_pilot[t.pilot_uid] = per_pilot.get(t.pilot_uid, 0) + 1
+        return {"makespan_s": makespan, "stolen": stolen,
+                "tasks_per_pilot": per_pilot}
+    finally:
+        rpex.shutdown()
+
+
+def run_autoscale(n_tasks: int, task_s: float) -> dict:
+    cfg = ScalerConfig(template=PilotDescription(n_slots=2, name="elastic"),
+                       min_pilots=1, max_pilots=3,
+                       scale_up_wait_s=0.1, scale_down_idle_s=0.4,
+                       spawn_cooldown_s=0.2, interval_s=0.05)
+    rpex = RPEXExecutor(PilotDescription(n_slots=2, name="seed"), scaler=cfg)
+    try:
+        tasks = [translate(_sleeper, (task_s,), {}) for _ in range(n_tasks)]
+        t0 = time.monotonic()
+        rpex.tmgr.submit_bulk(tasks)
+        ok = rpex.tmgr.wait(timeout=120)
+        makespan = time.monotonic() - t0
+        assert ok, "autoscale workload timed out"
+        deadline = time.monotonic() + 10.0
+        while time.monotonic() < deadline:      # wait out the idle retire
+            kinds = {e["event"] for e in rpex.pool.events()}
+            if "PILOT_RETIRE" in kinds:
+                break
+            time.sleep(0.05)
+        events = rpex.pool.events()
+        kinds = {e["event"] for e in events}
+        cycle_ok = {"PILOT_START", "STOLEN", "PILOT_RETIRE"} <= kinds
+        return {"makespan_s": makespan, "cycle_ok": cycle_ok,
+                "n_spawned": sum(1 for d in rpex.scaler.decisions
+                                 if d["action"] == "scale_up"),
+                "n_retired": sum(1 for d in rpex.scaler.decisions
+                                 if d["action"] == "retire"),
+                "stolen": sum(1 for e in events if e["event"] == "STOLEN"),
+                "utilization_keys": len(rpex.utilization())}
+    finally:
+        rpex.shutdown()
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tasks", type=int, default=40)
+    ap.add_argument("--long-ms", type=float, default=80.0)
+    ap.add_argument("--short-ms", type=float, default=4.0)
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="repeat each phase-1 measurement, keep the best "
+                         "makespan per mode (container scheduling noise)")
+    ap.add_argument("--min-speedup", type=float, default=0.0,
+                    help="exit nonzero if the stealing makespan speedup "
+                         "over static routing falls below this "
+                         "(0 = report only)")
+    ap.add_argument("--out", default=str(Path(__file__).parent /
+                                         "artifacts" / "BENCH_balance.json"))
+    args = ap.parse_args(argv)
+
+    long_s, short_s = args.long_ms / 1000.0, args.short_ms / 1000.0
+    results = {"config": {"tasks": args.tasks, "long_ms": args.long_ms,
+                          "short_ms": args.short_ms,
+                          "repeats": args.repeats}}
+
+    print("# phase 1: skewed bulk workload, 2 pilots x 2 slots")
+    static = min((run_balance(args.tasks, long_s, short_s, steal=False)
+                  for _ in range(max(1, args.repeats))),
+                 key=lambda r: r["makespan_s"])
+    steal = min((run_balance(args.tasks, long_s, short_s, steal=True)
+                 for _ in range(max(1, args.repeats))),
+                key=lambda r: r["makespan_s"])
+    speedup = static["makespan_s"] / steal["makespan_s"]
+    results["static"] = static
+    results["steal"] = steal
+    results["makespan_speedup"] = speedup
+    print(f"  static routing : {static['makespan_s']:.3f}s "
+          f"(stolen={static['stolen']})")
+    print(f"  work stealing  : {steal['makespan_s']:.3f}s "
+          f"(stolen={steal['stolen']})")
+    print(f"  makespan speedup: {speedup:.2f}x")
+
+    print("# phase 2: elastic autoscale cycle (1 seed pilot + PoolScaler)")
+    scale = run_autoscale(12, 0.15)
+    results["autoscale"] = scale
+    print(f"  makespan {scale['makespan_s']:.3f}s, spawned="
+          f"{scale['n_spawned']}, retired={scale['n_retired']}, "
+          f"stolen={scale['stolen']}, cycle_ok={scale['cycle_ok']}")
+
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(results, indent=2))
+    print(f"wrote {out}")
+
+    if not scale["cycle_ok"]:
+        raise SystemExit("REGRESSION: no full steal/scale cycle "
+                         "(PILOT_START/STOLEN/PILOT_RETIRE) in events")
+    if args.min_speedup and speedup < args.min_speedup:
+        raise SystemExit(
+            f"REGRESSION: stealing makespan speedup {speedup:.2f}x < "
+            f"required {args.min_speedup:.2f}x")
+    return results
+
+
+if __name__ == "__main__":
+    main()

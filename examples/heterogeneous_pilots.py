@@ -9,12 +9,20 @@ pilot.  The workflow below is the Colmena shape: per item a Python
 pre-process, an SPMD simulation on a device sub-mesh, and a Python
 collector, with dataflow dependencies between them.
 
+Part 2 demos elasticity: the same executor given a PoolScaler template
+spawns an extra CPU pilot when a burst of pre-processing tasks backs up
+the queue (PILOT_START), steals the backlog onto it (STOLEN), and drains
++ retires it once the burst passes (PILOT_RETIRE) — watch the event
+stream printed at the end.
+
 Run: PYTHONPATH=src python examples/heterogeneous_pilots.py
 """
+import time
+
 import jax.numpy as jnp
 
 from repro.core import (DataFlowKernel, PilotDescription, RPEXExecutor,
-                        python_app, spmd_app)
+                        ScalerConfig, python_app, spmd_app)
 
 
 @python_app
@@ -34,20 +42,60 @@ def collect(results):
     return sorted((r["sim_id"], round(r["energy"], 3)) for r in results)
 
 
+@python_app
+def crunch(i):
+    time.sleep(0.1)        # a burst of these overloads the cpu pilot
+    return i
+
+
 def main():
-    rpex = RPEXExecutor([
-        PilotDescription(n_slots=4, kinds=("python", "bash"), name="cpu"),
-        PilotDescription(n_slots=8, kinds=("spmd",), name="device"),
-    ])
+    rpex = RPEXExecutor(
+        [
+            PilotDescription(n_slots=4, kinds=("python", "bash"),
+                             name="cpu"),
+            PilotDescription(n_slots=8, kinds=("spmd",), name="device"),
+        ],
+        # elastic: spawn up to 2 extra CPU pilots when queue wait builds,
+        # retire them after ~0.5s idle (knobs: docs/elasticity.md)
+        scaler=ScalerConfig(
+            template=PilotDescription(n_slots=4, kinds=("python", "bash"),
+                                      name="elastic"),
+            min_pilots=2, max_pilots=4,
+            scale_up_wait_s=0.15, scale_down_idle_s=0.5,
+            spawn_cooldown_s=0.3),
+    )
     with DataFlowKernel(executors={"rpex": rpex}):
         sims = [simulate(pre(i)) for i in range(6)]
         table = collect(sims).result()
+        print("collected:", table)
+        for uid, t in rpex.tmgr.tasks.items():
+            print(f"  {uid:<16} kind={t.kind:<7} res_kind={t.res_kind:<7} "
+                  f"-> {t.pilot_uid}")
 
-    print("collected:", table)
-    for uid, t in rpex.tmgr.tasks.items():
-        print(f"  {uid:<16} kind={t.kind:<7} res_kind={t.res_kind:<7} "
-              f"-> {t.pilot_uid}")
+        # part 2: a burst that outgrows the cpu pilot -> autoscale cycle
+        burst = [crunch(i) for i in range(24)]
+        assert sorted(f.result() for f in burst) == list(range(24))
+
+        # wait for the idle retire *inside* the context: exiting it shuts
+        # the executor (and the scaler) down
+        deadline = time.monotonic() + 5.0
+        while time.monotonic() < deadline:
+            if any(e["event"] == "PILOT_RETIRE"
+                   for e in rpex.pool.events()):
+                break
+            time.sleep(0.05)
+
     print("per-pilot utilization:", rpex.utilization())
+    print("scaler decisions:")
+    for d in rpex.scaler.decisions:
+        print("  ", d)
+    print("elastic cycle events:")
+    for e in rpex.pool.events():
+        if e["event"] in ("PILOT_START", "STOLEN", "PILOT_RETIRE"):
+            print(f"  {e['event']:<12} {e.get('uid', '')} "
+                  f"pilot={e.get('pilot', e.get('dst', ''))}")
+    print("rp overhead from event stream: "
+          f"{rpex.rp_overhead() * 1000:.1f} ms")
     rpex.shutdown()
 
 

@@ -1,13 +1,19 @@
 #!/usr/bin/env bash
 # Tier-1 verification: the whole test suite must collect and pass.
 # Usage: scripts/ci.sh [extra pytest args...]
+#   CI_COVERAGE=1  — run under `coverage run --source=src/repro`
+#   CI_BENCH=1     — append the throughput benchmark smoke
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
-python -m pytest -q "$@"
+if [[ "${CI_COVERAGE:-0}" == "1" ]]; then
+    coverage run --source=src/repro -m pytest -q "$@"
+else
+    python -m pytest -q "$@"
+fi
 
 # runtime micro-benchmark smoke (fast settings; the full run is
 # `python benchmarks/exp3_throughput.py`)

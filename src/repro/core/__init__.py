@@ -12,18 +12,19 @@ from .executors import Executor, ParslTask, ThreadPoolExecutor
 from .futures import (AppFuture, ResourceSpec, TaskRecord, TaskState,
                       new_uid)
 from .pilot import (Pilot, PilotDescription, PilotManager, PilotPool,
-                    TaskManager)
+                    PoolScaler, ScalerConfig, TaskManager)
 from .rpex import RPEXExecutor
 from .scheduler import SlotScheduler
 from .spmd_executor import SPMDFunctionExecutor
-from .store import StateStore
+from .store import StateStore, overhead_from_events
 from .translator import bind_future, detect_kind, translate
 
 __all__ = [
     "Agent", "AppFuture", "DataFlowKernel", "Executor", "ParslTask",
-    "Pilot", "PilotDescription", "PilotManager", "PilotPool", "RPEXExecutor",
-    "ResourceSpec", "SPMDFunctionExecutor", "SlotScheduler", "StateStore",
-    "TaskManager", "TaskRecord", "TaskState", "ThreadPoolExecutor",
-    "bash_app", "bind_future", "current_dfk", "detect_kind", "new_uid",
-    "python_app", "spmd_app", "translate",
+    "Pilot", "PilotDescription", "PilotManager", "PilotPool", "PoolScaler",
+    "RPEXExecutor", "ResourceSpec", "SPMDFunctionExecutor", "ScalerConfig",
+    "SlotScheduler", "StateStore", "TaskManager", "TaskRecord", "TaskState",
+    "ThreadPoolExecutor", "bash_app", "bind_future", "current_dfk",
+    "detect_kind", "new_uid", "overhead_from_events", "python_app",
+    "spmd_app", "translate",
 ]

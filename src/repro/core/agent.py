@@ -17,6 +17,14 @@ separate monitor thread implements straggler mitigation (soft-deadline
 replicas) and retry-on-failure; it waits on the stop event rather than
 sleeping, so shutdown is prompt.
 
+Work stealing: ``steal()`` extracts queued-but-not-dispatched tasks under
+the same condition variable the scheduler loop holds for a whole pass, so
+a task is either still in the wait heap (stealable, callback moves with
+it) or already allocated (not stealable) — never both, never neither.
+When a pass leaves the agent hungry (empty wait heap, free slots) the
+``idle_cb`` hook fires outside the lock so a PilotPool can migrate work
+from a loaded sibling without lock-ordering hazards.
+
 ``shutdown(wait=True)`` is an event wait on the outstanding-task counter —
 it returns as soon as the agent drains (immediately when idle).
 
@@ -76,6 +84,9 @@ class Agent:
         self._dirty = False         # a wake event arrived for the loop
         self._stop = threading.Event()
 
+        self._accepting = True      # False once draining/stopped: submit
+                                    # refuses instead of heaping tasks no
+                                    # scheduler thread will ever drain
         self._ready: "queue.SimpleQueue" = queue.SimpleQueue()
         self._workers: List[threading.Thread] = []
         self._ready_count = 0       # dispatched, not yet claimed by a worker
@@ -85,6 +96,10 @@ class Agent:
         self._sched_thread = threading.Thread(target=self._loop, daemon=True)
         self._mon_thread = threading.Thread(target=self._monitor, daemon=True)
         self._started = False
+        # work-request hook: called (outside all locks) with the free slot
+        # count whenever a scheduling pass ends with an empty wait heap and
+        # spare capacity — the PilotPool wires this to its steal coordinator
+        self.idle_cb: Optional[Callable[[int], None]] = None
         self.scheduler.add_listener(self._on_capacity)
 
     # ------------------------------ api -------------------------------- #
@@ -95,8 +110,15 @@ class Agent:
             self._mon_thread.start()
         return self
 
-    def submit(self, task: TaskRecord, done_cb: Optional[Callable] = None):
+    def submit(self, task: TaskRecord,
+               done_cb: Optional[Callable] = None) -> bool:
+        """Returns False (without enqueuing) when the agent no longer
+        accepts work — draining or stopped — so a submission racing a
+        retire is refused visibly instead of heaping a task no scheduler
+        thread will ever drain."""
         with self._cv:
+            if not self._accepting or self._stop.is_set():
+                return False
             if done_cb is not None:
                 self._done_cb[task.uid] = done_cb
             self._outstanding += 1
@@ -106,7 +128,7 @@ class Agent:
             # the scheduler-thread handoff (one fewer context switch on the
             # hot submit->run path; priority order is vacuous on an empty
             # queue, so semantics are unchanged)
-            if not self._wait and not self._stop.is_set():
+            if not self._wait:
                 slots = self.scheduler.allocate(task.uid,
                                                 task.resources.slots)
                 if slots is not None:
@@ -114,21 +136,33 @@ class Agent:
                     task.transition(TaskState.SCHEDULED, self.store)
                     self._running[task.uid] = task
                     self._dispatch(task)
-                    return
+                    return True
             heapq.heappush(self._wait,
                            (-task.resources.priority, self._seq, task))
             self._seq += 1
             self._dirty = True
             self._cv.notify_all()
+            return True
 
-    def submit_bulk(self, tasks, done_cb: Optional[Callable] = None):
+    def submit_bulk(self, tasks, done_cb: Optional[Callable] = None) -> bool:
         """Bulk submission (the paper's named future work): one lock
         acquisition and one wakeup for a whole batch, cutting per-task
-        submission overhead."""
+        submission overhead.  False if the agent no longer accepts work
+        (nothing enqueued)."""
         with self._cv:
+            if not self._accepting or self._stop.is_set():
+                return False
             for t in tasks:
                 self._enqueue(t, done_cb)
             self._cv.notify_all()
+            return True
+
+    def stop_accepting(self):
+        """Refuse all future submissions (the drain barrier): called
+        before a drain's final queue sweep so no racing steal can land a
+        task after the sweep."""
+        with self._cv:
+            self._accepting = False
 
     def _enqueue(self, task: TaskRecord, done_cb: Optional[Callable]):
         """Caller holds self._cv."""
@@ -173,6 +207,81 @@ class Agent:
         with self._cv:
             return self._demand_slots
 
+    def queued_demand(self) -> int:
+        """Slots demanded by queued-but-not-dispatched tasks (the stealable
+        backlog; terminal leftovers awaiting cleanup are excluded)."""
+        with self._cv:
+            return sum(t.resources.slots for _, _, t in self._wait
+                       if t.state not in TERMINAL)
+
+    def oldest_queued_wait(self, now: Optional[float] = None) -> float:
+        """Seconds the longest-waiting queued task has sat unscheduled —
+        the PoolScaler's scale-up signal.  0.0 when the queue is empty."""
+        now = now if now is not None else time.monotonic()
+        with self._cv:
+            ts = [t.timestamps.get("TRANSLATED",
+                                   t.timestamps.get("NEW", now))
+                  for _, _, t in self._wait if t.state not in TERMINAL]
+        return max(0.0, now - min(ts)) if ts else 0.0
+
+    def wait_idle(self, timeout: Optional[float] = None) -> bool:
+        """Event-wait until every submitted task reached a terminal state
+        (or was stolen away).  True if drained within the timeout."""
+        with self._cv:
+            return self._cv.wait_for(lambda: self._outstanding == 0, timeout)
+
+    # ---------------------------- work stealing -------------------------- #
+    def steal(self, pred: Optional[Callable[[TaskRecord], bool]] = None,
+              max_tasks: Optional[int] = None,
+              max_slots: Optional[int] = None
+              ) -> List[Tuple[TaskRecord, Optional[Callable]]]:
+        """Steal-safe queue extraction: atomically remove queued-but-not-
+        dispatched tasks (latest-submitted first, classic steal-from-the-
+        tail) together with their completion callbacks.
+
+        Runs under the same condition variable `_schedule_pass` holds for a
+        whole pass, so a task racing a dispatch is observed on exactly one
+        side: still queued (stolen, never dispatched here) or already
+        allocated (kept, never stolen).  Outstanding/demand counters move
+        with the task, so `shutdown(wait=True)` and `load()` stay correct
+        on the victim.  Sticky tasks and straggler replicas are never
+        handed out (replicas' first-finisher-wins bookkeeping is pilot-
+        local); `pred=None` takes everything else (the drain path).
+        """
+        taken: List[Tuple[TaskRecord, Optional[Callable]]] = []
+        with self._cv:
+            if not self._wait:
+                return taken
+            keep: List[Tuple[int, int, TaskRecord]] = []
+            slots_left = max_slots if max_slots is not None else float("inf")
+            # FIFO order is ascending (-priority, seq); walk the tail first
+            for item in sorted(self._wait, reverse=True):
+                _, _, t = item
+                if t.state in TERMINAL:
+                    # canceled while queued: settle in place, as the
+                    # scheduling pass would have
+                    self._done_cb.pop(t.uid, None)
+                    self._outstanding -= 1
+                    self._demand_slots -= t.resources.slots
+                    continue
+                eligible = (t.replica_of is None
+                            and (pred is None
+                                 or (not t.sticky and pred(t)))
+                            and (max_tasks is None or len(taken) < max_tasks)
+                            and t.resources.slots <= slots_left)
+                if not eligible:
+                    keep.append(item)
+                    continue
+                taken.append((t, self._done_cb.pop(t.uid, None)))
+                slots_left -= t.resources.slots
+                self._outstanding -= 1
+                self._demand_slots -= t.resources.slots
+            keep.sort()
+            self._wait = keep                    # sorted list is a valid heap
+            if self._outstanding == 0:
+                self._cv.notify_all()            # a shutdown wait may park
+        return taken
+
     # --------------------------- scheduling ----------------------------- #
     def _on_capacity(self):
         """Scheduler listener: slots were released or grown — wake the loop."""
@@ -189,6 +298,22 @@ class Agent:
                     return
                 self._dirty = False
             self._schedule_pass()
+            self._maybe_request_work()
+
+    def _maybe_request_work(self):
+        """After a pass: if the wait heap is empty and slots are free, ask
+        the pool for work.  Called with no locks held — the hook steals
+        from a sibling agent (its cv) then submits here (our cv), and
+        holding ours across that would invert the lock order."""
+        cb = self.idle_cb
+        if cb is None:
+            return
+        with self._cv:
+            hungry = not self._wait and not self._stop.is_set()
+        if hungry:
+            free = self.scheduler.n_free
+            if free > 0:
+                cb(free)
 
     def _schedule_pass(self):
         with self._cv:

@@ -32,9 +32,13 @@ def _mk_app(fn: Callable, kind: str, resources: ResourceSpec,
 
 
 def python_app(fn=None, *, retries: int = 0, executor: Optional[str] = None,
-               slots: int = 1):
+               slots: int = 1, sticky: bool = False):
+    """sticky=True pins every invocation to the pilot it was routed to:
+    the task is never migrated by inter-pilot work stealing (use for tasks
+    with pilot-local state or data affinity)."""
     def deco(f):
-        return _mk_app(f, "python", ResourceSpec(slots=slots, cpu_only=True),
+        return _mk_app(f, "python", ResourceSpec(slots=slots, cpu_only=True,
+                                                 sticky=sticky),
                        retries, executor)
     return deco(fn) if fn is not None else deco
 
@@ -42,14 +46,15 @@ def python_app(fn=None, *, retries: int = 0, executor: Optional[str] = None,
 def spmd_app(fn=None, *, slots: int = 1,
              mesh: Optional[Tuple[int, int]] = None, retries: int = 0,
              executor: Optional[str] = None, priority: int = 0,
-             jit: bool = True):
+             jit: bool = True, sticky: bool = False):
     """jit=False for bodies that manage their own jit (e.g. a training
-    segment calling a pre-jitted step) or that are not traceable."""
+    segment calling a pre-jitted step) or that are not traceable.
+    sticky=True exempts the task from inter-pilot work stealing."""
     def deco(f):
         f.__spmd_jit__ = jit
         return _mk_app(f, "spmd",
                        ResourceSpec(slots=slots, mesh_shape=mesh,
-                                    priority=priority),
+                                    priority=priority, sticky=sticky),
                        retries, executor)
     return deco(fn) if fn is not None else deco
 

@@ -16,6 +16,7 @@ recorded result (checkpoint/restart at the workflow level).
 """
 from __future__ import annotations
 
+import dataclasses
 import threading
 import time
 from typing import Any, Dict, List, Optional, Tuple
@@ -100,8 +101,15 @@ class DataFlowKernel:
     # ----------------------------- submission --------------------------- #
     def submit(self, fn, args: tuple = (), kwargs: Optional[dict] = None,
                resources: Optional[ResourceSpec] = None, retries: int = 0,
-               executor: Optional[str] = None) -> AppFuture:
+               executor: Optional[str] = None,
+               sticky: Optional[bool] = None) -> AppFuture:
         kwargs = kwargs or {}
+        if sticky is not None:
+            # per-invocation steal-eligibility override: threaded through the
+            # ResourceSpec so the translator stamps it onto the pilot task
+            base = (resources or getattr(fn, "__resources__", None)
+                    or ResourceSpec())
+            resources = dataclasses.replace(base, sticky=sticky)
         name = getattr(fn, "__name__", "app")
         with self._lock:
             idx = self._invocation_idx.get(name, 0)

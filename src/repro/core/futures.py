@@ -53,6 +53,9 @@ class ResourceSpec:
     priority: int = 0
     res_kind: Optional[str] = None  # resource class for pilot routing
                                     # ("cpu" | "device"); None = inferred
+    sticky: bool = False            # pin to the routed pilot: never migrated
+                                    # by work stealing (e.g. tasks with
+                                    # pilot-local state or data affinity)
 
     def __post_init__(self):
         if self.slots < 1:
@@ -85,7 +88,9 @@ class TaskRecord:
     res_kind: Optional[str] = None  # stamped by the translator
     app_kind: Optional[str] = None  # pre-translation kind (bash apps run
                                     # as kind="python" but route as "bash")
-    pilot_uid: Optional[str] = None  # late-bound by PilotPool routing
+    pilot_uid: Optional[str] = None  # late-bound by PilotPool routing;
+                                     # re-stamped if the task is stolen
+    sticky: bool = False            # steal-eligibility stamp (translator)
 
     def transition(self, state: TaskState, store=None):
         self.state = state

@@ -13,9 +13,20 @@ restrict the task kinds it accepts; the TaskManager *late-binds* every
 translated task to the least-loaded compatible pilot at submission time —
 the paper's "heterogeneous tasks on heterogeneous resources" claim made
 operational.
+
+Since PR 2 the binding is no longer immutable: the pool is an active load
+balancer.  When a pilot's agent goes hungry (empty wait heap, free slots)
+its ``idle_cb`` asks the pool for work and the pool *steals* queued-but-
+not-dispatched compatible tasks from the most-loaded sibling, re-stamping
+``pilot_uid`` and emitting a STOLEN event so TaskManager bookkeeping and
+journal replay stay correct.  A PoolScaler can additionally grow and
+shrink the pilot set itself: it watches the unified StateStore event
+streams, spawns a new pilot from a template description when queue wait
+exceeds a threshold, and drains + retires idle pilots (PILOT_RETIRE).
 """
 from __future__ import annotations
 
+import dataclasses
 import threading
 import time
 from dataclasses import dataclass, field
@@ -60,6 +71,8 @@ class Pilot:
                            backfill_window=desc.backfill_window,
                            straggler_factor=desc.straggler_factor).start()
         self.t_start = time.monotonic()
+        self.draining = False     # a draining pilot accepts no new work
+        self._closed = False
         self.store.record_event("PILOT_START", pilot=self.uid, n_slots=n,
                                 kinds=list(desc.kinds or ()) or None)
 
@@ -67,7 +80,10 @@ class Pilot:
     def accepts(self, task: TaskRecord) -> bool:
         """Compatible iff the description accepts the task's kind, its
         pre-translation app kind (bash apps execute as kind="python"), or
-        its stamped resource kind (None = accepts everything)."""
+        its stamped resource kind (None = accepts everything).  A draining
+        pilot accepts nothing."""
+        if self.draining:
+            return False
         if self.desc.kinds is None:
             return True
         return any(k is not None and k in self.desc.kinds
@@ -91,38 +107,103 @@ class Pilot:
     def n_slots(self) -> int:
         return self.scheduler.capacity
 
+    # ----------------------------- retirement --------------------------- #
+    def drain(self, timeout: float = 30.0
+              ) -> List[Tuple[TaskRecord, Optional[Callable]]]:
+        """Stop accepting, hand back queued tasks, finish running tasks,
+        then close.  Returns the orphaned (task, done_cb) pairs for the
+        caller to re-route elsewhere.
+
+        Tasks that fail mid-drain (e.g. an injected slot failure) requeue
+        into the wait heap with no capacity left to run them, so the wait
+        loop keeps sweeping the heap into the orphan list until the agent
+        is empty — the pilot retires even under faults."""
+        self.draining = True
+        # barrier: refuse submissions from here on, so a steal racing this
+        # drain is rejected (and re-placed by the pool) instead of landing
+        # a task after the final sweep on an agent that will never run it
+        self.agent.stop_accepting()
+        orphans = list(self.agent.steal())
+        deadline = time.monotonic() + timeout
+        while not self.agent.wait_idle(timeout=0.1):
+            orphans += self.agent.steal()
+            if time.monotonic() > deadline:
+                break
+        drained = self.agent.wait_idle(timeout=0)
+        self.agent.shutdown(wait=False)
+        self.store.record_event("PILOT_RETIRE", pilot=self.uid,
+                                drained=drained)
+        self.store.close()
+        self._closed = True
+        return orphans
+
     def close(self):
+        if self._closed:
+            return
+        self._closed = True
+        self.draining = True
         self.agent.shutdown()
         self.store.close()
 
 
 class PilotPool:
-    """N pilots with heterogeneous descriptions + kind-aware late binding."""
+    """N pilots with heterogeneous descriptions + kind-aware late binding.
+
+    The pool is also the steal coordinator and the elastic-membership
+    authority: agents' idle hooks call ``request_work`` to migrate queued
+    tasks off the most-loaded sibling, ``add_pilot``/``retire`` grow and
+    shrink the pilot set at runtime, and migrate hooks let the TaskManager
+    keep its bookkeeping (journal keys, task map) correct when a task's
+    pilot binding changes after submission."""
 
     def __init__(self,
                  descs: Optional[Sequence[PilotDescription]] = None,
-                 pilots: Optional[Sequence[Pilot]] = None):
+                 pilots: Optional[Sequence[Pilot]] = None,
+                 steal: bool = True):
         if pilots is None and descs is None:
             descs = [PilotDescription()]
         self.pilots: List[Pilot] = (list(pilots) if pilots is not None
                                     else [Pilot(d) for d in descs])
         if not self.pilots:
             raise ValueError("PilotPool needs at least one pilot")
+        self.retired: List[Pilot] = []
+        self.steal_enabled = steal
+        self._lock = threading.RLock()
+        self._migrate_hooks: List[Callable] = []
         self._closed = False
+        for p in self.pilots:
+            self._wire(p)
+
+    def _wire(self, p: Pilot):
+        if self.steal_enabled:
+            p.agent.idle_cb = (
+                lambda free, _p=p: self.request_work(_p, free))
 
     def __len__(self):
-        return len(self.pilots)
+        with self._lock:
+            return len(self.pilots)
+
+    def active(self) -> List[Pilot]:
+        with self._lock:
+            return list(self.pilots)
+
+    def all_pilots(self) -> List[Pilot]:
+        """Active + retired — journal lookups and event queries must cover
+        pilots that no longer exist."""
+        with self._lock:
+            return list(self.pilots) + list(self.retired)
 
     def by_uid(self, uid: str) -> Optional[Pilot]:
-        return next((p for p in self.pilots if p.uid == uid), None)
+        return next((p for p in self.all_pilots() if p.uid == uid), None)
 
     def _compatible(self, task: TaskRecord) -> List[Pilot]:
-        compat = [p for p in self.pilots if p.accepts(task)]
+        pilots = self.active()
+        compat = [p for p in pilots if p.accepts(task)]
         if not compat:
             raise RuntimeError(
                 f"no pilot accepts task {task.uid} "
                 f"(kind={task.kind!r}, res_kind={task.res_kind!r}; pool "
-                f"kinds={[p.desc.kinds for p in self.pilots]!r})")
+                f"kinds={[p.desc.kinds for p in pilots]!r})")
         return compat
 
     def route(self, task: TaskRecord) -> Pilot:
@@ -137,8 +218,9 @@ class PilotPool:
         piling onto whichever was idle when the batch arrived.  An
         unroutable task yields its RuntimeError in place of a pilot, so
         one bad task never aborts the rest of the batch."""
-        loads = {p.uid: p.load() for p in self.pilots}
-        caps = {p.uid: max(1, p.scheduler.capacity) for p in self.pilots}
+        pilots = self.active()
+        loads = {p.uid: p.load() for p in pilots}
+        caps = {p.uid: max(1, p.scheduler.capacity) for p in pilots}
         out: List[Union[Pilot, Exception]] = []
         for t in tasks:
             try:
@@ -150,24 +232,284 @@ class PilotPool:
             out.append(p)
         return out
 
+    # --------------------------- work stealing -------------------------- #
+    def add_migrate_hook(self, cb: Callable):
+        """cb(task, src_pilot, dst_pilot) fires for every migrated task,
+        after pilot_uid is re-stamped and before resubmission — the
+        TaskManager uses it to re-record journal keys on the new pilot."""
+        with self._lock:
+            self._migrate_hooks.append(cb)
+
+    def _migrate(self, task: TaskRecord, src: Pilot, dst: Pilot,
+                 cb: Optional[Callable], reason: str,
+                 _depth: int = 0) -> bool:
+        """Move one task to dst; True iff dst actually accepted it.  The
+        migrate hooks run *before* submission (the journal-key record must
+        land on dst before the task can complete there), but the STOLEN
+        event is only emitted for accepted migrations, so event counts
+        never overstate what moved."""
+        task.pilot_uid = dst.uid
+        with self._lock:
+            hooks = list(self._migrate_hooks)
+        for h in hooks:
+            h(task, src, dst)
+        if not dst.agent.submit(task, done_cb=cb):
+            # dst began draining/closing between routing and submission —
+            # the agent refused rather than heaping the task, so place it
+            # somewhere else (or fail it visibly if nowhere is left)
+            self._place_orphan(task, cb, src, reason, _depth + 1)
+            return False
+        dst.store.record_event("STOLEN", uid=task.uid, src=src.uid,
+                               dst=dst.uid, reason=reason)
+        return True
+
+    def _place_orphan(self, task: TaskRecord, cb: Optional[Callable],
+                      src: Pilot, reason: str, _depth: int = 0):
+        """Route a task displaced by a drain (or a refused migration) onto
+        a surviving pilot — preferring pilots whose capacity can actually
+        fit it, so an oversized orphan is not parked on a pilot that could
+        only ever run it after a grow().  Fails the task through its
+        callback when no pilot accepts it or every candidate refuses."""
+        err: Optional[Exception] = None
+        if _depth <= len(self.all_pilots()) + 2:
+            try:
+                cands = self._compatible(task)
+                fitting = [p for p in cands
+                           if task.resources.slots <= p.scheduler.capacity]
+                dst = min(fitting or cands, key=lambda p: p.load())
+                self._migrate(task, src, dst, cb, reason, _depth)
+                return
+            except RuntimeError as e:
+                err = e
+        task.error = err or RuntimeError(
+            f"no pilot could take displaced task {task.uid}")
+        task.transition(TaskState.FAILED)
+        if cb is not None:
+            cb(task)
+
+    def request_work(self, thief: Pilot, free_slots: Optional[int] = None
+                     ) -> int:
+        """Steal queued-but-not-dispatched tasks from the most-loaded
+        compatible sibling into ``thief``.  Returns slots' worth of work
+        moved.  Called from agents' idle hooks (outside any agent lock)
+        and from the PoolScaler."""
+        if self._closed or thief.draining:
+            return 0
+        free = (free_slots if free_slots is not None
+                else thief.scheduler.n_free)
+        if free <= 0:
+            return 0
+        with self._lock:
+            cands = [p for p in self.pilots if p is not thief]
+        # snapshot demands once: queued_demand scans the victim's wait
+        # heap under its cv, so don't re-pay it in the sort key and again
+        # per loop iteration
+        demand = {p.uid: p.agent.queued_demand() for p in cands}
+        moved = 0
+        for victim in sorted(cands, key=lambda p: demand[p.uid],
+                             reverse=True):
+            if moved >= free or demand[victim.uid] == 0:
+                break
+            batch = victim.agent.steal(
+                pred=lambda t, _th=thief: (
+                    _th.accepts(t)
+                    and t.resources.slots <= _th.scheduler.capacity),
+                max_slots=free - moved)
+            for task, cb in batch:
+                if self._migrate(task, victim, thief, cb, reason="steal"):
+                    moved += task.resources.slots
+        return moved
+
+    def rebalance(self) -> int:
+        """Pull work to every hungry pilot (free slots, empty wait heap) —
+        the PoolScaler's periodic safety net for idle hooks that fired
+        before any sibling had a backlog."""
+        moved = 0
+        for p in self.active():
+            if p.draining:
+                continue
+            free = p.scheduler.n_free
+            if free > 0 and p.agent.queued_demand() == 0:
+                moved += self.request_work(p, free)
+        return moved
+
+    # ------------------------- elastic membership ------------------------ #
+    def add_pilot(self, desc: PilotDescription) -> Pilot:
+        """Spawn a pilot into the live pool (records PILOT_START)."""
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("pool is closed")
+            p = Pilot(desc)
+            self.pilots.append(p)
+        self._wire(p)
+        return p
+
+    def retire(self, pilot: Pilot, timeout: float = 30.0) -> bool:
+        """Drain + retire a pilot: it stops accepting work, its queued
+        tasks migrate to the surviving pilots, running tasks finish, then
+        it closes (records PILOT_RETIRE).  The last pilot never retires."""
+        with self._lock:
+            if pilot not in self.pilots or len(self.pilots) <= 1:
+                return False
+            self.pilots.remove(pilot)
+            self.retired.append(pilot)
+        orphans = pilot.drain(timeout=timeout)
+        for task, cb in orphans:
+            self._place_orphan(task, cb, pilot, reason="drain")
+        return True
+
+    # ------------------------------ queries ------------------------------ #
     def utilization(self) -> Dict[str, float]:
-        """Per-pilot busy-slot fraction, keyed by pilot uid."""
-        return {p.uid: p.scheduler.utilization() for p in self.pilots}
+        """Per-pilot busy-slot fraction across the (possibly changed)
+        pilot set, keyed by pilot uid; retired pilots report 0.0."""
+        return {p.uid: p.scheduler.utilization() for p in self.all_pilots()}
 
     def events(self) -> List[dict]:
-        """Unified event stream merged across all pilots' stores."""
+        """Unified event stream merged across all pilots' stores,
+        including retired pilots."""
         out = []
-        for p in self.pilots:
+        for p in self.all_pilots():
             for e in p.store.events:
                 out.append({**e, "pilot": e.get("pilot") or p.uid})
         return sorted(out, key=lambda e: e["t"])
 
     def close(self):
-        if self._closed:
-            return
-        self._closed = True
-        for p in self.pilots:
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            ps = list(self.pilots) + list(self.retired)
+        for p in ps:
             p.close()
+
+
+@dataclass
+class ScalerConfig:
+    """PoolScaler knobs (see docs/elasticity.md).
+
+    template          — PilotDescription cloned for every spawned pilot
+                        (journal paths get a per-spawn suffix)
+    min_pilots        — never retire below this many pilots
+    max_pilots        — never spawn beyond this many pilots
+    scale_up_wait_s   — spawn when the oldest queued task has waited this
+                        long without being scheduled
+    scale_down_idle_s — retire a pilot idle (no running or queued work)
+                        for this long
+    spawn_cooldown_s  — minimum time between spawns, so one long queue
+                        does not burst to max_pilots before the first new
+                        pilot can absorb work
+    interval_s        — fallback watch cadence; the scaler is otherwise
+                        woken by StateStore events
+    retire_spawned_only — only retire pilots the scaler itself spawned
+                        (user-configured pilots are never drained)
+    """
+    template: PilotDescription = field(default_factory=PilotDescription)
+    min_pilots: int = 1
+    max_pilots: int = 4
+    scale_up_wait_s: float = 0.25
+    scale_down_idle_s: float = 1.0
+    spawn_cooldown_s: float = 0.5
+    interval_s: float = 0.05
+    retire_spawned_only: bool = True
+
+
+class PoolScaler:
+    """Elastic autoscaler: grows and shrinks the *pilot set* (not just
+    slots) under load.  Watches the pools' unified StateStore event
+    streams — every appended event kicks the scaler awake — and each tick
+    (1) rebalances queued work onto hungry pilots, (2) spawns a pilot from
+    the template when queue wait exceeds the threshold, (3) drains and
+    retires pilots idle past the threshold."""
+
+    def __init__(self, pool: PilotPool, config: Optional[ScalerConfig] = None):
+        self.pool = pool
+        self.cfg = config or ScalerConfig()
+        self.decisions: List[dict] = []     # audit log of scale actions
+        self._kick = threading.Event()
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._spawned: Set[str] = set()
+        self._idle_since: Dict[str, float] = {}
+        self._watched: Set[int] = set()
+        self._last_spawn = 0.0
+
+    def start(self) -> "PoolScaler":
+        self._attach()
+        self._thread.start()
+        return self
+
+    def stop(self):
+        self._stop.set()
+        self._kick.set()
+        if self._thread.is_alive():
+            self._thread.join(timeout=5.0)
+
+    # ------------------------------ loop -------------------------------- #
+    def _attach(self):
+        """Subscribe to every pilot's event stream (idempotent; newly
+        spawned pilots are picked up on the next tick)."""
+        for p in self.pool.active():
+            if id(p.store) not in self._watched:
+                self._watched.add(id(p.store))
+                p.store.add_listener(lambda _rec: self._kick.set())
+
+    def _loop(self):
+        while not self._stop.is_set():
+            self._kick.wait(self.cfg.interval_s)
+            self._kick.clear()
+            if self._stop.is_set():
+                return
+            try:
+                self._tick()
+            except Exception as e:   # noqa: BLE001 — the scaler must never
+                # take down the runtime; record the fault and keep watching
+                self.decisions.append({"action": "error", "error": repr(e),
+                                       "t": time.monotonic()})
+
+    def _tick(self):
+        self._attach()
+        self.pool.rebalance()       # stealing first: it is always cheaper
+        now = time.monotonic()      # than spawning a pilot
+        pilots = self.pool.active()
+
+        # scale up: the oldest queued task has waited past the threshold
+        # even after rebalancing, so no existing pilot can absorb it soon
+        wait = max((p.agent.oldest_queued_wait(now) for p in pilots),
+                   default=0.0)
+        if (wait > self.cfg.scale_up_wait_s
+                and len(pilots) < self.cfg.max_pilots
+                and now - self._last_spawn >= self.cfg.spawn_cooldown_s):
+            p = self.pool.add_pilot(self._spawn_desc())
+            self._spawned.add(p.uid)
+            self._last_spawn = now
+            self.decisions.append({"action": "scale_up", "pilot": p.uid,
+                                   "queue_wait_s": wait, "t": now})
+            self.pool.request_work(p, p.scheduler.n_free)
+
+        # scale down: drain + retire pilots idle past the threshold
+        for p in pilots:
+            if p.draining:
+                continue
+            if p.load() > 0:
+                self._idle_since.pop(p.uid, None)
+                continue
+            since = self._idle_since.setdefault(p.uid, now)
+            if (now - since >= self.cfg.scale_down_idle_s
+                    and len(self.pool) > self.cfg.min_pilots
+                    and (not self.cfg.retire_spawned_only
+                         or p.uid in self._spawned)):
+                if self.pool.retire(p):
+                    self._idle_since.pop(p.uid, None)
+                    self.decisions.append({"action": "retire",
+                                           "pilot": p.uid, "t": now})
+
+    def _spawn_desc(self) -> PilotDescription:
+        d = self.cfg.template
+        n = len(self._spawned)
+        return dataclasses.replace(
+            d,
+            name=f"{d.name or 'elastic'}{n}",
+            journal=f"{d.journal}.{n}" if d.journal else None)
 
 
 class PilotManager:
@@ -179,8 +521,9 @@ class PilotManager:
         self.pilots[p.uid] = p
         return p
 
-    def submit_pilots(self, descs: Sequence[PilotDescription]) -> PilotPool:
-        pool = PilotPool(descs=descs)
+    def submit_pilots(self, descs: Sequence[PilotDescription],
+                      steal: bool = True) -> PilotPool:
+        pool = PilotPool(descs=descs, steal=steal)
         for p in pool.pilots:
             self.pilots[p.uid] = p
         return pool
@@ -207,6 +550,16 @@ class TaskManager:
         self._cv = threading.Condition()
         self._done: Set[str] = set()
         self._outstanding = 0
+        self._wf_keys: Dict[str, str] = {}
+        # keep journal replay correct under work stealing: when a task
+        # migrates, its record (with the workflow key) must land on the
+        # pilot that will actually run it
+        self.pool.add_migrate_hook(self._on_migrate)
+
+    def _on_migrate(self, task: TaskRecord, src: Pilot, dst: Pilot):
+        key = self._wf_keys.get(task.uid)
+        if key is not None:
+            dst.store.record(task, workflow_key=key)
 
     @property
     def pilot(self) -> Pilot:
@@ -217,6 +570,7 @@ class TaskManager:
     def _completion_cb(self, done_cb: Optional[Callable]):
         def _cb(t: TaskRecord):
             uid = t.uid if t.replica_of is None else t.replica_of
+            self._wf_keys.pop(uid, None)    # terminal: migrations are over
             with self._cv:
                 if uid not in self._done:
                     self._done.add(uid)
@@ -236,6 +590,7 @@ class TaskManager:
         pilot.store.record_event("ROUTED", uid=task.uid, pilot=pilot.uid,
                                  kind=task.kind)
         if workflow_key is not None:
+            self._wf_keys[task.uid] = workflow_key
             pilot.store.record(task, workflow_key=workflow_key)
         return pilot
 
@@ -256,16 +611,27 @@ class TaskManager:
     def submit(self, task: TaskRecord,
                done_cb: Optional[Callable] = None,
                workflow_key: Optional[str] = None) -> TaskRecord:
-        try:
-            pilot = self.pool.route(task)
-        except RuntimeError as e:
-            self._fail_unroutable(task, e, done_cb)
-            return task
-        self._bind(task, workflow_key, pilot=pilot)
-        with self._cv:
-            self._outstanding += 1
-        task.transition(TaskState.TRANSLATED, pilot.store)
-        pilot.agent.submit(task, done_cb=self._completion_cb(done_cb))
+        cb = self._completion_cb(done_cb)
+        # a routed pilot may start draining between route() and submit();
+        # the agent then refuses instead of heaping the task, and we
+        # simply route again (draining pilots are no longer compatible)
+        for _ in range(len(self.pool.all_pilots()) + 2):
+            try:
+                pilot = self.pool.route(task)
+            except RuntimeError as e:
+                self._fail_unroutable(task, e, done_cb)
+                return task
+            self._bind(task, workflow_key, pilot=pilot)
+            with self._cv:
+                self._outstanding += 1
+            task.transition(TaskState.TRANSLATED, pilot.store)
+            if pilot.agent.submit(task, done_cb=cb):
+                return task
+            with self._cv:
+                self._outstanding -= 1      # refused: unwind and retry
+        self._fail_unroutable(
+            task, RuntimeError(f"every pilot refused task {task.uid}"),
+            done_cb)
         return task
 
     def submit_bulk(self, tasks: List[TaskRecord],
@@ -287,7 +653,11 @@ class TaskManager:
             self._outstanding += routed
         cb = self._completion_cb(done_cb)
         for pilot, batch in per_pilot.values():
-            pilot.agent.submit_bulk(batch, done_cb=cb)
+            if not pilot.agent.submit_bulk(batch, done_cb=cb):
+                # the whole batch's pilot began draining mid-submission:
+                # re-place each task on a surviving pilot
+                for t in batch:
+                    self.pool._place_orphan(t, cb, pilot, reason="reroute")
         return tasks
 
     # ------------------------------ waiting ------------------------------ #

@@ -21,7 +21,8 @@ from typing import List, Optional, Sequence, Tuple, Union
 from .executors import Executor, ParslTask
 from .futures import AppFuture, TaskState
 from .pilot import (Pilot, PilotDescription, PilotManager, PilotPool,
-                    TaskManager)
+                    PoolScaler, ScalerConfig, TaskManager)
+from .store import overhead_from_events
 from .translator import bind_future, translate
 
 Descs = Union[PilotDescription, Sequence[PilotDescription]]
@@ -33,7 +34,9 @@ class RPEXExecutor(Executor):
 
     def __init__(self, pilot_desc: Optional[Descs] = None,
                  pilot: Optional[Pilot] = None,
-                 pilots: Optional[Sequence[Pilot]] = None):
+                 pilots: Optional[Sequence[Pilot]] = None,
+                 scaler: Optional[ScalerConfig] = None,
+                 steal: bool = True):
         # "Once initialized, RPEX ... starts a new RP session and creates
         # the Pilot Manager and the Task Manager."
         self._own_pilots = pilot is None and pilots is None
@@ -45,12 +48,15 @@ class RPEXExecutor(Executor):
             else:
                 descs = list(pilot_desc)
             self.pmgr = PilotManager()
-            self.pool = self.pmgr.submit_pilots(descs)
+            self.pool = self.pmgr.submit_pilots(descs, steal=steal)
         else:
             self.pmgr = None
             self.pool = PilotPool(
-                pilots=list(pilots) if pilots is not None else [pilot])
+                pilots=list(pilots) if pilots is not None else [pilot],
+                steal=steal)
         self.tmgr = TaskManager(self.pool)
+        self.scaler = (PoolScaler(self.pool, scaler).start()
+                       if scaler is not None else None)
         self.overhead_events: List[Tuple[str, float]] = []
 
     @property
@@ -89,23 +95,35 @@ class RPEXExecutor(Executor):
 
     # ------------------------------------------------------------------ #
     def completed_result(self, workflow_key: str):
-        """(found, result) across every pilot's journal — the DFK restart
-        lookup for a multi-pilot executor."""
-        for p in self.pool.pilots:
+        """(found, result) across every pilot's journal — including
+        retired pilots, since a stolen task's DONE record lives in the
+        journal of the pilot that actually ran it."""
+        for p in self.pool.all_pilots():
             found, result = p.store.completed_result(workflow_key)
             if found:
                 return True, result
         return False, None
 
     def utilization(self):
-        """Per-pilot busy-slot fraction (unified event stream backs the
-        offline Fig.6-style breakdown; see StateStore.utilization)."""
+        """Per-pilot busy-slot fraction across the (possibly elastic)
+        pilot set (unified event stream backs the offline Fig.6-style
+        breakdown; see StateStore.utilization)."""
         return self.pool.utilization()
+
+    def rp_overhead(self) -> float:
+        """RP overhead in seconds, recomputed from the unified event
+        stream: the wall-clock union of SCHEDULED->RUNNING intervals
+        across every pilot, including retired ones.  Unlike the per-task
+        timestamp sum, this neither double-counts concurrent launches nor
+        charges slot-idle gaps between dependent tasks."""
+        return overhead_from_events(self.pool.events())
 
     def drain(self, timeout: Optional[float] = None) -> bool:
         return self.tmgr.wait(timeout=timeout)
 
     def shutdown(self):
+        if self.scaler is not None:
+            self.scaler.stop()
         if self._own_pilots:
             self.pool.close()
             if self.pmgr is not None:

@@ -166,7 +166,11 @@ class SlotScheduler:
         with self._lock:
             victims = []
             for s in slots:
-                if s in self._failed:
+                if s in self._failed or not (0 <= s < self._extent):
+                    # already failed, or never part of the extent: counting
+                    # a nonexistent slot would corrupt capacity, and
+                    # poisoning _failed with ids beyond the extent would
+                    # break a later grow() that reuses them
                     continue
                 self._failed.add(s)
                 if self._remove_free_slot(s):
@@ -206,6 +210,12 @@ class SlotScheduler:
             return tuple(victims)
 
     # ------------------------------ stats ------------------------------ #
+    def free_blocks(self) -> List[Tuple[int, int]]:
+        """Snapshot of the free interval list — invariant: sorted,
+        disjoint, coalesced (no two adjacent blocks touch)."""
+        with self._lock:
+            return [(b0, b1) for b0, b1 in self._blocks]
+
     @property
     def n_free(self) -> int:
         with self._lock:

@@ -35,6 +35,8 @@ class StateStore:
         self._lock = threading.Lock()
         self.tasks: Dict[str, dict] = {}
         self.events: List[dict] = []        # unified, append-only stream
+        self._listeners: List[Any] = []     # fired (outside the lock) on
+                                            # every appended event
         self._fh = None
         if self.journal_path:
             self.journal_path.parent.mkdir(parents=True, exist_ok=True)
@@ -52,11 +54,23 @@ class StateStore:
                 self.tasks[rec["uid"]] = rec
 
     # ------------------------------ events ------------------------------ #
+    def add_listener(self, cb):
+        """Register a callback fired (outside the store lock) with each
+        appended event record — the PoolScaler's wake-up source."""
+        with self._lock:
+            self._listeners.append(cb)
+
+    def _notify(self, rec: dict):
+        for cb in list(self._listeners):
+            cb(rec)
+
     def record_event(self, event: str, **fields):
-        """Append a non-task runtime event (pilot start, routing, resize)."""
+        """Append a non-task runtime event (pilot start, routing, resize,
+        steal, retire)."""
         rec = {"event": event, "t": time.monotonic(), **fields}
         with self._lock:
             self.events.append(rec)
+        self._notify(rec)
 
     def record(self, task: TaskRecord, workflow_key: Optional[str] = None):
         rec = {
@@ -74,19 +88,21 @@ class StateStore:
             rec["result"] = task.result
         if task.error is not None:
             rec["error"] = repr(task.error)[:500]
+        ev = {
+            "event": "STATE", "uid": task.uid,
+            "state": task.state.value, "t": time.monotonic(),
+            "slots": len(task.slot_ids) or 1,
+            "pilot": task.pilot_uid,
+        }
         with self._lock:
             prev = self.tasks.get(task.uid, {})
             if "key" not in rec or rec["key"] is None:
                 rec["key"] = prev.get("key")
             self.tasks[task.uid] = {**prev, **rec}
-            self.events.append({
-                "event": "STATE", "uid": task.uid,
-                "state": task.state.value, "t": time.monotonic(),
-                "slots": len(task.slot_ids) or 1,
-                "pilot": task.pilot_uid,
-            })
+            self.events.append(ev)
             if self._fh:
                 self._fh.write(json.dumps(self.tasks[task.uid]) + "\n")
+        self._notify(ev)
 
     # ------------------------------ queries ----------------------------- #
     def completed_result(self, workflow_key: str):
@@ -153,9 +169,13 @@ class StateStore:
         return out
 
     def close(self):
-        if self._fh:
-            self._fh.close()
-            self._fh = None
+        # under the lock: a late task completion (e.g. one that outlived a
+        # drain timeout) may be mid-record; after this, its journal write
+        # is skipped (memory-only) instead of hitting a closed handle
+        with self._lock:
+            if self._fh:
+                self._fh.close()
+                self._fh = None
 
 
 def _jsonable(x) -> bool:
@@ -164,3 +184,47 @@ def _jsonable(x) -> bool:
         return True
     except (TypeError, ValueError):
         return False
+
+
+def overhead_from_events(events: List[dict]) -> float:
+    """RP overhead recomputed from the unified event stream: wall-clock
+    seconds during which the runtime was placing or launching at least one
+    task — the union (not the per-task sum) of every [SCHEDULED, RUNNING)
+    interval observed in the stream.
+
+    The per-task timestamp sum this replaces overcounts twice: concurrent
+    launches are each charged full price even though they overlap in wall
+    time, and a retried task's timestamps dict keeps only the last
+    SCHEDULED/RUNNING pair, silently mixing attempts.  The event stream
+    keeps every occurrence, so each attempt contributes its own interval
+    and overlapping intervals are merged before integrating.  Slot-idle
+    gaps between dependent tasks contribute nothing: no task is in
+    SCHEDULED/LAUNCHING there, so no interval covers the gap.
+    """
+    opens: Dict[str, float] = {}            # uid -> t of pending SCHEDULED
+    ivals: List[tuple] = []
+    for e in sorted((e for e in events if e.get("event") == "STATE"),
+                    key=lambda e: e["t"]):
+        uid, state, t = e["uid"], e["state"], e["t"]
+        if state == "SCHEDULED":
+            opens[uid] = t
+        elif state in ("RUNNING",) + _END_STATES and uid in opens:
+            # RUNNING closes the overhead interval; a terminal state closes
+            # it too for tasks that failed before ever running
+            start = opens.pop(uid)
+            if t > start:
+                ivals.append((start, t))
+    ivals.sort()
+    total = 0.0
+    cur_start: Optional[float] = None
+    cur_end = 0.0
+    for s, t in ivals:
+        if cur_start is None or s > cur_end:
+            if cur_start is not None:
+                total += cur_end - cur_start
+            cur_start, cur_end = s, t
+        else:
+            cur_end = max(cur_end, t)
+    if cur_start is not None:
+        total += cur_end - cur_start
+    return total

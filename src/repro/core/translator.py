@@ -51,7 +51,7 @@ def translate(fn: Callable, args: tuple, kwargs: dict,
         body = _bash_runner(fn)
         kind = "python"  # executed as a single-slot callable wrapping a proc
         res = ResourceSpec(slots=res.slots, cpu_only=True,
-                           priority=res.priority)
+                           priority=res.priority, sticky=res.sticky)
     kwargs = dict(kwargs)
     if kind == "spmd" and not getattr(fn, "__spmd_jit__", True):
         kwargs["_jit"] = False
@@ -59,6 +59,7 @@ def translate(fn: Callable, args: tuple, kwargs: dict,
         uid=new_uid("task"), kind=kind, fn=body, args=args, kwargs=kwargs,
         resources=res, max_retries=max_retries,
         app_kind=detect_kind(fn),
+        sticky=res.sticky,
         res_kind=res.res_kind or (
             "device" if kind == "spmd" and not res.cpu_only else "cpu"))
     task.transition(TaskState.NEW)
