@@ -171,8 +171,8 @@ def main(argv=None):
                          "baseline falls below this (0 = report only); CI "
                          "uses a conservative value to catch regressions "
                          "without flaking on scheduler noise")
-    ap.add_argument("--out", default=str(Path(__file__).parent /
-                                        "artifacts" / "BENCH_throughput.json"))
+    ap.add_argument("--out", default=str(Path(__file__).resolve().parent.parent
+                                         / "BENCH_throughput.json"))
     args = ap.parse_args(argv)
 
     results = {"config": {"tasks": args.tasks,
@@ -188,7 +188,7 @@ def main(argv=None):
     for n_pilots in (1, 2):
         ev_stream = best(bench_event_stream, args.stream_tasks, args.slots,
                          n_pilots)
-        ev_bulk = bench_event_bulk(args.tasks, args.slots, n_pilots)
+        ev_bulk = best(bench_event_bulk, args.tasks, args.slots, n_pilots)
         results[f"event_{n_pilots}p"] = {
             "stream_us_per_task": ev_stream * 1e6,
             "bulk_us_per_task": ev_bulk * 1e6,
@@ -201,7 +201,8 @@ def main(argv=None):
     print("# polling baseline (pre-refactor control flow)")
     poll_stream = best(bench_polling_stream, args.stream_tasks, args.slots,
                        args.poll_interval)
-    poll_bulk = bench_polling_bulk(args.tasks, args.slots, args.poll_interval)
+    poll_bulk = best(bench_polling_bulk, args.tasks, args.slots,
+                     args.poll_interval)
     results["polling"] = {"stream_us_per_task": poll_stream * 1e6,
                           "bulk_us_per_task": poll_bulk * 1e6}
     print(f"  stream: {poll_stream * 1e6:9.1f} us/task")

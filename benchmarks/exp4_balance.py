@@ -109,8 +109,8 @@ def main(argv=None):
                     help="exit nonzero if the stealing makespan speedup "
                          "over static routing falls below this "
                          "(0 = report only)")
-    ap.add_argument("--out", default=str(Path(__file__).parent /
-                                         "artifacts" / "BENCH_balance.json"))
+    ap.add_argument("--out", default=str(Path(__file__).resolve().parent.parent
+                                         / "BENCH_balance.json"))
     args = ap.parse_args(argv)
 
     long_s, short_s = args.long_ms / 1000.0, args.short_ms / 1000.0

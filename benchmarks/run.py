@@ -6,14 +6,67 @@
   bulk   -> paper's future-work bulk-submission mode, measured
   roofline -> §Roofline table from the dry-run artifacts (assignment)
 
+The gated runtime benchmarks (exp3 throughput, exp4 balance, exp5 state
+path) each emit a canonical ``BENCH_*.json`` at the repo root so the perf
+trajectory is tracked across PRs; ``--bench-summary`` aggregates whatever
+artifacts are present into one table without re-running anything.
+
 Prints ``name,us_per_call,derived`` CSV summary lines at the end.
 """
 from __future__ import annotations
 
 import contextlib
 import io
+import json
 import sys
 import time
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# headline metric per canonical artifact: (json path, label, format)
+_BENCH_HEADLINES = {
+    "BENCH_throughput.json": [
+        (("event_1p", "stream_us_per_task"), "stream us/task", "{:.1f}"),
+        (("event_1p", "bulk_tasks_per_s"), "bulk tasks/s", "{:,.0f}"),
+        (("stream_speedup_vs_polling",), "vs polling", "{:.1f}x"),
+    ],
+    "BENCH_balance.json": [
+        (("steal", "makespan_s"), "steal makespan s", "{:.2f}"),
+        (("makespan_speedup",), "vs static", "{:.2f}x"),
+    ],
+    "BENCH_statepath.json": [
+        (("record", "write_behind_us_per_task"), "journal us/task", "{:.1f}"),
+        (("record", "speedup"), "vs sync", "{:.1f}x"),
+        (("lookup", "speedup"), "lookup vs scan", "{:.0f}x"),
+        (("fanin", "speedup"), "fan-in vs PR-2", "{:.1f}x"),
+    ],
+}
+
+
+def bench_summary() -> list:
+    """Aggregate the repo-root BENCH_*.json artifacts into summary rows."""
+    rows = []
+    for name in sorted(_BENCH_HEADLINES):
+        path = REPO / name
+        if not path.exists():
+            rows.append((name, "missing — run its benchmarks/exp*.py"))
+            continue
+        data = json.loads(path.read_text())
+        cells = []
+        for keys, label, fmt in _BENCH_HEADLINES[name]:
+            v = data
+            try:
+                for k in keys:
+                    v = v[k]
+                cells.append(f"{label}={fmt.format(v)}")
+            except (KeyError, TypeError):
+                cells.append(f"{label}=?")
+        rows.append((name, "  ".join(cells)))
+    print("\n### canonical BENCH artifacts (repo root)")
+    for name, line in rows:
+        print(f"{name:26s} {line}")
+    return rows
 
 
 def _run(name, fn, *a, **kw):
@@ -26,7 +79,12 @@ def _run(name, fn, *a, **kw):
     return name, dt, out
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if "--bench-summary" in argv:
+        bench_summary()
+        return
+
     from benchmarks import exp1_executor, exp2_usecases, roofline_report
 
     summary = []
@@ -76,6 +134,8 @@ def main() -> None:
     print("\nname,us_per_call,derived")
     for row in summary:
         print(f"{row[0]},{row[1]:.1f},{row[2]}")
+
+    bench_summary()
 
 
 if __name__ == "__main__":

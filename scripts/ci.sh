@@ -15,8 +15,10 @@ else
     python -m pytest -q "$@"
 fi
 
-# runtime micro-benchmark smoke (fast settings; the full run is
-# `python benchmarks/exp3_throughput.py`)
+# runtime micro-benchmark smoke (fast settings; the full runs are
+# `python benchmarks/exp3_throughput.py` / `exp5_statepath.py`)
 if [[ "${CI_BENCH:-0}" == "1" ]]; then
     python benchmarks/exp3_throughput.py --tasks 200 --stream-tasks 50
+    python benchmarks/exp5_statepath.py --tasks 500 --records 5000 \
+        --lookups 500 --producers 128 --repeats 2
 fi

@@ -16,7 +16,7 @@ from .pilot import (Pilot, PilotDescription, PilotManager, PilotPool,
 from .rpex import RPEXExecutor
 from .scheduler import SlotScheduler
 from .spmd_executor import SPMDFunctionExecutor
-from .store import StateStore, overhead_from_events
+from .store import StateStore, overhead_from_events, union_intervals
 from .translator import bind_future, detect_kind, translate
 
 __all__ = [
@@ -26,5 +26,5 @@ __all__ = [
     "SlotScheduler", "StateStore", "TaskManager", "TaskRecord", "TaskState",
     "ThreadPoolExecutor", "bash_app", "bind_future", "current_dfk",
     "detect_kind", "new_uid", "overhead_from_events", "python_app",
-    "spmd_app", "translate",
+    "spmd_app", "translate", "union_intervals",
 ]

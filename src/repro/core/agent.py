@@ -93,6 +93,10 @@ class Agent:
         self._executing = 0         # claimed by a worker, still running
         self._demand_slots = 0      # slots of all outstanding tasks (O(1)
                                     # routing load metric)
+        self._queued_slots = 0      # slots of queued-but-not-dispatched
+                                    # tasks (O(1) steal/scaler metric —
+                                    # PoolScaler ticks and steal sorting
+                                    # read it instead of scanning the heap)
         self._sched_thread = threading.Thread(target=self._loop, daemon=True)
         self._mon_thread = threading.Thread(target=self._monitor, daemon=True)
         self._started = False
@@ -140,6 +144,7 @@ class Agent:
             heapq.heappush(self._wait,
                            (-task.resources.priority, self._seq, task))
             self._seq += 1
+            self._queued_slots += task.resources.slots
             self._dirty = True
             self._cv.notify_all()
             return True
@@ -148,13 +153,38 @@ class Agent:
         """Bulk submission (the paper's named future work): one lock
         acquisition and one wakeup for a whole batch, cutting per-task
         submission overhead.  False if the agent no longer accepts work
-        (nothing enqueued)."""
+        (nothing enqueued).
+
+        Fast path (mirrors submit()): with an empty wait heap the batch is
+        allocated inline in the submitting thread, in the same descending-
+        priority order a fresh scheduling pass would use, skipping the
+        scheduler-thread handoff; the first task that does not fit (and
+        everything after it) is heaped for the event-driven loop."""
         with self._cv:
             if not self._accepting or self._stop.is_set():
                 return False
-            for t in tasks:
+            pending = list(tasks)
+            if not self._wait:
+                pending.sort(key=lambda t: -t.resources.priority)  # stable
+                cut = None
+                for i, t in enumerate(pending):
+                    slots = self.scheduler.allocate(t.uid, t.resources.slots)
+                    if slots is None:
+                        cut = i
+                        break
+                    if done_cb is not None:
+                        self._done_cb[t.uid] = done_cb
+                    self._outstanding += 1
+                    self._demand_slots += t.resources.slots
+                    t.slot_ids = slots
+                    t.transition(TaskState.SCHEDULED, self.store)
+                    self._running[t.uid] = t
+                    self._dispatch(t)
+                pending = [] if cut is None else pending[cut:]
+            for t in pending:
                 self._enqueue(t, done_cb)
-            self._cv.notify_all()
+            if pending:
+                self._cv.notify_all()
             return True
 
     def stop_accepting(self):
@@ -173,6 +203,7 @@ class Agent:
         self._seq += 1
         self._outstanding += 1
         self._demand_slots += task.resources.slots
+        self._queued_slots += task.resources.slots
         self._dirty = True
 
     def shutdown(self, wait: bool = True, timeout: float = 60.0):
@@ -209,10 +240,14 @@ class Agent:
 
     def queued_demand(self) -> int:
         """Slots demanded by queued-but-not-dispatched tasks (the stealable
-        backlog; terminal leftovers awaiting cleanup are excluded)."""
+        backlog).  An O(1) counter read maintained at enqueue / dispatch /
+        steal, so PoolScaler ticks and steal-victim sorting no longer scan
+        the wait heap under the scheduler's condition variable.  A task
+        that turns terminal while queued keeps its slots counted until the
+        next scheduling pass or steal sweeps it — the same staleness
+        window ``_demand_slots`` (load()) has always had."""
         with self._cv:
-            return sum(t.resources.slots for _, _, t in self._wait
-                       if t.state not in TERMINAL)
+            return max(0, self._queued_slots)
 
     def oldest_queued_wait(self, now: Optional[float] = None) -> float:
         """Seconds the longest-waiting queued task has sat unscheduled —
@@ -263,6 +298,7 @@ class Agent:
                     self._done_cb.pop(t.uid, None)
                     self._outstanding -= 1
                     self._demand_slots -= t.resources.slots
+                    self._queued_slots -= t.resources.slots
                     continue
                 eligible = (t.replica_of is None
                             and (pred is None
@@ -276,6 +312,7 @@ class Agent:
                 slots_left -= t.resources.slots
                 self._outstanding -= 1
                 self._demand_slots -= t.resources.slots
+                self._queued_slots -= t.resources.slots
             keep.sort()
             self._wait = keep                    # sorted list is a valid heap
             if self._outstanding == 0:
@@ -327,6 +364,7 @@ class Agent:
                 if t.state in TERMINAL:      # canceled while queued
                     self._outstanding -= 1
                     self._demand_slots -= t.resources.slots
+                    self._queued_slots -= t.resources.slots
                     if self._outstanding == 0:
                         self._cv.notify_all()
                     continue
@@ -335,6 +373,7 @@ class Agent:
                     rest.append(item)        # backfill: keep trying later ones
                     continue
                 t.slot_ids = slots
+                self._queued_slots -= t.resources.slots
                 t.transition(TaskState.SCHEDULED, self.store)
                 self._running[t.uid] = t
                 self._dispatch(t)
@@ -417,6 +456,7 @@ class Agent:
                 heapq.heappush(self._wait,
                                (-task.resources.priority, self._seq, task))
                 self._seq += 1
+                self._queued_slots += task.resources.slots
                 self._dirty = True
                 self._cv.notify_all()
             return

@@ -4,6 +4,23 @@ Wraps every app invocation in an AppFuture, maintains the task DAG (edges =
 futures passed between apps), submits a task to its executor only when its
 dependencies resolve, and tracks every task's state.
 
+Dependency resolution is *batched* (PR 3): instead of registering one
+done-callback per (consumer, dependency) edge — N lock round-trips to
+launch a wide fan-in — the DFK keeps one dependency manager: each waiting
+consumer holds an atomic remaining-deps counter, each producer future
+carries a single DFK-level callback, and when a producer completes every
+consumer it feeds is decremented in one pass under one lock.  Consumers
+that become ready launch as one submit_bulk per executor in that same
+pass (bulk mode) or are submitted in order (stream mode) — a 256-wide
+fan-out launches in one pass, not 256 callback chains, and a wide fan-in
+aggregator skips the window wait entirely (its batch is already
+coalesced).
+
+Bulk window flushing is likewise a single persistent flusher thread with
+one deadline per executor, replacing the fresh ``threading.Timer`` the
+old code spawned per window (and its flush-vs-timer double-submit
+hazard).
+
 Two submission modes toward RPEX:
   * stream (paper's current behavior): each ready task submitted one by one;
   * bulk (paper's named future work): ready tasks are batched per tick and
@@ -19,11 +36,10 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from .executors import Executor, ParslTask, ThreadPoolExecutor
 from .futures import AppFuture, ResourceSpec, TaskRecord, TaskState, new_uid
-from .translator import translate
 
 _current: List["DataFlowKernel"] = []
 
@@ -46,7 +62,7 @@ def _resolve(obj):
     """Substitute resolved results for futures, preserving structure
     (including NamedTuples, e.g. optimizer states)."""
     if isinstance(obj, AppFuture):
-        return obj.result()
+        return obj.quick_result()
     if isinstance(obj, list):
         return [_resolve(x) for x in obj]
     if isinstance(obj, tuple):
@@ -65,6 +81,18 @@ def current_dfk() -> "DataFlowKernel":
     return _current[-1]
 
 
+class _DepNode:
+    """A submitted-but-waiting consumer: its launch closure plus the count
+    of producers it still waits on.  ``remaining`` is only touched under
+    the DFK's dependency lock."""
+
+    __slots__ = ("remaining", "launch")
+
+    def __init__(self, remaining: int, launch: Callable):
+        self.remaining = remaining
+        self.launch = launch
+
+
 class DataFlowKernel:
     def __init__(self, executors: Optional[Dict[str, Executor]] = None,
                  default_executor: Optional[str] = None,
@@ -77,11 +105,23 @@ class DataFlowKernel:
         self.run_id = run_id
         self._lock = threading.Lock()
         self._invocation_idx: Dict[str, int] = {}
-        self._pending_bulk: Dict[str, List[Tuple[ParslTask, AppFuture]]] = {}
-        self._flushers: Dict[str, threading.Timer] = {}   # per executor
         self.tasks: Dict[str, TaskRecord] = {}   # DAG nodes
         self.edges: List[Tuple[str, str]] = []   # (producer, consumer)
         self.t_start = time.monotonic()
+
+        # dependency manager: producer future -> consumers waiting on it.
+        # Keyed by the future object (identity), not its uid: executors
+        # re-point future.task at the translated pilot task on launch, so
+        # the uid is not stable between registration and completion.
+        self._dep_lock = threading.Lock()
+        self._consumers: Dict[AppFuture, List[_DepNode]] = {}
+
+        # bulk buffers + the single persistent flusher thread
+        self._flush_cv = threading.Condition()
+        self._pending_bulk: Dict[str, List[Tuple[ParslTask, AppFuture]]] = {}
+        self._due: Dict[str, float] = {}         # label -> flush deadline
+        self._flusher: Optional[threading.Thread] = None
+        self._stopped = False
 
     # --------------------------- context mgmt --------------------------- #
     def __enter__(self):
@@ -95,6 +135,13 @@ class DataFlowKernel:
 
     def shutdown(self):
         self.flush()
+        with self._flush_cv:
+            self._stopped = True
+            self._flush_cv.notify_all()
+        if self._flusher is not None:
+            self._flusher.join(timeout=5.0)
+            self._flusher = None
+        self.flush()                  # anything raced in during teardown
         for ex in self.executors.values():
             ex.shutdown()
 
@@ -151,7 +198,7 @@ class DataFlowKernel:
             self.edges.append((d.uid, node.uid))
             node.depends_on.append(d.uid)
 
-        def launch():
+        def launch() -> Optional[Tuple[str, ParslTask, AppFuture]]:
             try:
                 r_args = tuple(_resolve(a) for a in args)
                 r_kwargs = {k: _resolve(v) for k, v in kwargs.items()}
@@ -159,49 +206,146 @@ class DataFlowKernel:
                 node.transition(TaskState.FAILED)
                 if not future.done():
                     future.set_exception(e)
-                return
+                return None
             pt = ParslTask(fn, r_args, r_kwargs, node.resources, retries, key,
                            executor=label)
             node.transition(TaskState.TRANSLATED)
-            self._dispatch(ex, pt, future)
+            return label, pt, future
 
         if not deps:
-            launch()
-        else:
-            remaining = [len(deps)]
-            rlock = threading.Lock()
+            item = launch()
+            if item is not None:
+                self._dispatch_ready([item], immediate=False)
+            return future
 
-            def on_dep(_):
-                with rlock:
-                    remaining[0] -= 1
-                    ready = remaining[0] == 0
-                if ready:
-                    launch()
-
+        dep_node = _DepNode(len(deps), launch)
+        hook: List[AppFuture] = []           # producers needing our callback
+        with self._dep_lock:
             for d in deps:
-                d.add_done_callback(on_dep)
+                waiting = self._consumers.get(d)
+                if waiting is None:
+                    self._consumers[d] = [dep_node]
+                    hook.append(d)
+                else:
+                    waiting.append(dep_node)
+        for d in hook:
+            d.add_done_callback(self._on_producer_done)
+        for d in deps:
+            # a producer that completed between registration above and its
+            # callback being attached (or whose callback already drained)
+            # is settled here; _on_producer_done is idempotent — each node
+            # is popped and decremented at most once per registration
+            if d.done():
+                self._on_producer_done(d)
         return future
 
+    # ------------------------ dependency manager ------------------------- #
+    def _on_producer_done(self, fut: AppFuture):
+        """One producer completed: decrement every consumer waiting on it
+        in one pass under one lock; launch all newly-ready consumers as a
+        batch."""
+        with self._dep_lock:
+            waiting = self._consumers.pop(fut, None)
+            if not waiting:
+                return
+            ready = []
+            for n in waiting:
+                n.remaining -= 1
+                if n.remaining == 0:
+                    ready.append(n)
+        if not ready:
+            return
+        items = [item for item in (n.launch() for n in ready)
+                 if item is not None]
+        if items:
+            # dependency-ready batches are already coalesced — submit them
+            # in this pass instead of waiting out a stream window
+            self._dispatch_ready(items, immediate=True)
+
+    def _submit_batch(self, items: List[Tuple[str, ParslTask, AppFuture]]):
+        """One submit_bulk per executor for a coalesced batch (stream
+        submission for executors without bulk support)."""
+        per_label: Dict[str, List[Tuple[ParslTask, AppFuture]]] = {}
+        for label, pt, future in items:
+            ex = self.executors[label]
+            if ex.supports_bulk:
+                per_label.setdefault(label, []).append((pt, future))
+            else:
+                ex.submit(pt, future)
+        for label, pairs in per_label.items():
+            self.executors[label].submit_bulk(pairs)
+
+    def _dispatch_ready(self, items: List[Tuple[str, ParslTask, AppFuture]],
+                        immediate: bool):
+        """Route launched tasks to their executors.  An ``immediate``
+        (dependency-ready) batch is already coalesced: it goes out as one
+        submit_bulk per executor in the calling pass — wide fan-ins launch
+        without a window wait or a flusher handoff.  Stream submissions in
+        bulk mode land in the per-executor buffer, coalescing until the
+        flusher thread's per-label deadline."""
+        if not self.bulk:
+            # stream mode never buffers — skip the flush lock entirely
+            for label, pt, future in items:
+                self.executors[label].submit(pt, future)
+            return
+        if immediate:
+            self._submit_batch(items)
+            return
+        direct: List[Tuple[str, ParslTask, AppFuture]] = []
+        now = time.monotonic()
+        buffered = False
+        with self._flush_cv:
+            for label, pt, future in items:
+                ex = self.executors[label]
+                if self.bulk and ex.supports_bulk and not self._stopped:
+                    self._pending_bulk.setdefault(label, []).append(
+                        (pt, future))
+                    if label not in self._due:
+                        self._due[label] = now + self.bulk_window
+                    buffered = True
+                else:
+                    direct.append((label, pt, future))
+            if buffered:
+                if self._flusher is None:
+                    self._flusher = threading.Thread(
+                        target=self._flusher_loop, daemon=True)
+                    self._flusher.start()
+                self._flush_cv.notify_all()
+        for label, pt, future in direct:
+            self.executors[label].submit(pt, future)
+
     # ------------------------------- bulk -------------------------------- #
-    def _dispatch(self, ex: Executor, pt: ParslTask, future: AppFuture):
-        if self.bulk and ex.supports_bulk:
-            label = pt.executor or ex.label
-            with self._lock:
-                self._pending_bulk.setdefault(label, []).append((pt, future))
-                if label not in self._flushers:
-                    t = threading.Timer(self.bulk_window, self.flush, [label])
-                    t.daemon = True
-                    self._flushers[label] = t
-                    t.start()
-        else:
-            ex.submit(pt, future)
+    def _flusher_loop(self):
+        """The single persistent flusher: waits until the earliest
+        per-executor deadline, pops every due batch under the lock, and
+        submits them outside it.  Replaces one threading.Timer per window."""
+        while True:
+            with self._flush_cv:
+                while not self._due and not self._stopped:
+                    self._flush_cv.wait()
+                if self._stopped and not self._due:
+                    return
+                now = time.monotonic()
+                due_now = [l for l, d in self._due.items() if d <= now]
+                if not due_now and not self._stopped:
+                    self._flush_cv.wait(min(self._due.values()) - now)
+                    continue
+                batches = {}
+                for label in (due_now or list(self._due)):
+                    pairs = self._pending_bulk.pop(label, [])
+                    self._due.pop(label, None)
+                    if pairs:
+                        batches[label] = pairs
+            for label, pairs in batches.items():
+                self.executors[label].submit_bulk(pairs)
 
     def flush(self, executor: Optional[str] = None):
         """Flush pending bulk batches — all executors, or just one.  Safe to
-        call concurrently per executor: each label's batch is popped under
-        the lock, so a timer flush and an explicit flush never double-submit
-        and one executor's flush never blocks another's."""
-        with self._lock:
+        call concurrently per executor and concurrently with the flusher
+        thread: each label's batch is popped under the lock, so a deadline
+        flush and an explicit flush never double-submit and one executor's
+        flush never blocks another's."""
+        with self._flush_cv:
             labels = ([executor] if executor is not None
                       else list(self._pending_bulk))
             batches = {}
@@ -209,9 +353,7 @@ class DataFlowKernel:
                 pairs = self._pending_bulk.pop(label, [])
                 if pairs:
                     batches[label] = pairs
-                timer = self._flushers.pop(label, None)
-                if timer is not None:
-                    timer.cancel()
+                self._due.pop(label, None)
         for label, pairs in batches.items():
             self.executors[label].submit_bulk(pairs)
 

@@ -107,6 +107,25 @@ class AppFuture(Future):
     def __init__(self, task: TaskRecord):
         super().__init__()
         self.task = task
+        # lock-free fast read for dependency resolution: a wide fan-in
+        # resolves hundreds of already-completed futures, and each
+        # Future.result() pays a condition acquisition.  The stash is
+        # written before the state flips to FINISHED, so any reader that
+        # observed completion (e.g. via a done callback) sees it.
+        self._quick: Optional[Tuple[Any]] = None
+
+    def set_result(self, result):
+        self._quick = (result,)
+        super().set_result(result)
+
+    def quick_result(self):
+        """Result without the condition round-trip — only valid once the
+        future is known to be successfully completed; falls back to
+        result() (which blocks or raises) otherwise."""
+        q = self._quick
+        if q is not None:
+            return q[0]
+        return self.result()
 
     @property
     def uid(self) -> str:

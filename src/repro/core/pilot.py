@@ -369,7 +369,7 @@ class PilotPool:
         including retired pilots."""
         out = []
         for p in self.all_pilots():
-            for e in p.store.events:
+            for e in p.store.events_snapshot():
                 out.append({**e, "pilot": e.get("pilot") or p.uid})
         return sorted(out, key=lambda e: e["t"])
 

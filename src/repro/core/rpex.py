@@ -22,7 +22,7 @@ from .executors import Executor, ParslTask
 from .futures import AppFuture, TaskState
 from .pilot import (Pilot, PilotDescription, PilotManager, PilotPool,
                     PoolScaler, ScalerConfig, TaskManager)
-from .store import overhead_from_events
+from .store import union_intervals
 from .translator import bind_future, translate
 
 Descs = Union[PilotDescription, Sequence[PilotDescription]]
@@ -111,12 +111,22 @@ class RPEXExecutor(Executor):
         return self.pool.utilization()
 
     def rp_overhead(self) -> float:
-        """RP overhead in seconds, recomputed from the unified event
-        stream: the wall-clock union of SCHEDULED->RUNNING intervals
-        across every pilot, including retired ones.  Unlike the per-task
-        timestamp sum, this neither double-counts concurrent launches nor
-        charges slot-idle gaps between dependent tasks."""
-        return overhead_from_events(self.pool.events())
+        """RP overhead in seconds: the wall-clock union of
+        SCHEDULED->RUNNING intervals across every pilot, including retired
+        ones.  Unlike the per-task timestamp sum, this neither
+        double-counts concurrent launches nor charges slot-idle gaps
+        between dependent tasks.  Each store maintains its closed
+        intervals incrementally, so the cross-pilot merge unions O(tasks)
+        intervals instead of re-scanning O(events) stream records.
+        History whose intervals were compacted away survives as each
+        store's scalar base — summed, since cross-pilot overlap of that
+        prefix is no longer reconstructable (a documented upper bound)."""
+        ivals = []
+        base = 0.0
+        for p in self.pool.all_pilots():
+            ivals.extend(p.store.overhead_intervals())
+            base += p.store.overhead_base()
+        return base + union_intervals(ivals)
 
     def drain(self, timeout: Optional[float] = None) -> bool:
         return self.tmgr.wait(timeout=timeout)

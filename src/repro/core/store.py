@@ -13,6 +13,30 @@ decision, elastic resize) is appended as one timestamped record.  The
 stream replaces the ad-hoc per-component timestamp dicts the runtime used
 to keep — per-pilot utilization (the paper's Fig. 6 Scheduled/Launching/
 Running/Idle breakdown) is integrated directly from it.
+
+Since PR 3 the store is an *off-critical-path* subsystem:
+
+  * Journal writes are write-behind with group commit: ``record`` appends
+    the merged record to a bounded in-memory queue and returns; a
+    background writer thread drains the queue, serializes the whole batch,
+    and lands it with one ``write`` + one ``flush`` per drain cycle.
+    ``close()`` drains the queue before closing the file, so a clean
+    shutdown loses nothing; a hard crash loses at most the queue window,
+    and the replay path tolerates a torn tail line either way.
+  * ``completed_result`` is O(1): a ``workflow_key -> record`` index is
+    maintained on append (and on replay) instead of scanning every record.
+  * ``utilization()`` / ``timeline()`` / ``overhead()`` read counters that
+    are maintained incrementally as events append, so PoolScaler wakeups
+    and benchmark probes never re-integrate the full event stream.
+  * Long elastic runs compact the journal in place (snapshot + tail): when
+    the file holds many times more lines than live task records, the
+    writer thread atomically rewrites it as one snapshot line per task
+    plus a stats header, and appends from there.
+  * Restart rebuilds the event stream: every journal line carries a
+    monotonic timestamp (``mt``), so ``_replay`` reconstructs the STATE
+    events (and replays journaled runtime events) instead of dropping
+    them — post-restart ``utilization()``/``rp_overhead()`` see the
+    pre-restart history instead of silently undercounting.
 """
 from __future__ import annotations
 
@@ -20,38 +44,148 @@ import json
 import os
 import threading
 import time
+from collections import deque
 from pathlib import Path
-from typing import Any, Dict, List, Optional
+from typing import Any, Deque, Dict, List, Optional, Tuple
 
 from .futures import TaskRecord, TaskState
 
 _RUN_STATES = ("SCHEDULED", "LAUNCHING", "RUNNING")
 _END_STATES = ("DONE", "FAILED", "CANCELED")
 
+# Replay clock translation: journal stamps are time.monotonic(), whose
+# epoch resets on reboot.  Each line also carries a wall stamp, so replay
+# detects an epoch mismatch (boot offsets differing by more than this many
+# seconds) and shifts old stamps into the current boot's monotonic domain.
+_EPOCH_TOL_S = 600.0
+
 
 class StateStore:
-    def __init__(self, journal_path: Optional[str] = None):
+    def __init__(self, journal_path: Optional[str] = None,
+                 max_queue: int = 8192,
+                 compact_min_lines: int = 4096,
+                 compact_factor: int = 4):
         self.journal_path = Path(journal_path) if journal_path else None
         self._lock = threading.Lock()
         self.tasks: Dict[str, dict] = {}
         self.events: List[dict] = []        # unified, append-only stream
         self._listeners: List[Any] = []     # fired (outside the lock) on
                                             # every appended event
+        # key -> record index (O(1) completed_result); a DONE-with-result
+        # record is never displaced by a later non-DONE record of another
+        # uid, matching the old scan's "find any completed" semantics
+        self._by_key: Dict[str, dict] = {}
+
+        # ---- incremental counters (maintained on every STATE append) ----
+        self._timeline: Dict[str, Dict[str, float]] = {}
+        self._slots_max: Dict[str, int] = {}
+        self._occ = {"Scheduled": 0.0, "Launching": 0.0, "Running": 0.0}
+        self._ended: set = set()            # uids past their first terminal
+        self._t_min: Optional[float] = None
+        self._t_max: Optional[float] = None
+        # streaming overhead union: wall-clock with >=1 task in
+        # [SCHEDULED, RUNNING) — active-count sweep over the ordered stream
+        self._oh_opens: Dict[str, float] = {}
+        self._oh_active = 0
+        self._oh_ustart = 0.0               # start of the current busy span
+        self._oh_cur = 0.0                  # closed union inside that span
+        self._oh_total = 0.0
+        self._oh_seeded = 0.0               # pre-compaction overhead whose
+                                            # intervals were snapshotted away
+        self._oh_ivals: List[Tuple[float, float]] = []  # for cross-pilot union
+
+        # ---- write-behind journal ----
         self._fh = None
+        self._wq: Deque[dict] = deque()
+        self._wcv = threading.Condition()
+        self._wstop = False
+        self._wsleeping = False             # writer parked on its cv
+        self._winflight = 0                 # records popped, not yet on disk
+        self.journal_error: Optional[str] = None   # set when an I/O error
+                                            # killed journaling (memory-only
+                                            # operation continues)
+        self._writer: Optional[threading.Thread] = None
+        self._max_queue = max_queue
+        self._compact_min_lines = compact_min_lines
+        self._compact_factor = compact_factor
+        self._journal_lines = 0
         if self.journal_path:
             self.journal_path.parent.mkdir(parents=True, exist_ok=True)
             if self.journal_path.exists():
                 self._replay()
-            self._fh = open(self.journal_path, "a", buffering=1)
+            self._fh = open(self.journal_path, "a")
+            self._writer = threading.Thread(target=self._writer_loop,
+                                            daemon=True)
+            self._writer.start()
+
+    # ------------------------------ replay ------------------------------ #
+    @staticmethod
+    def _epoch_delta(wall: Optional[float], mono: float,
+                     cur_off: float) -> float:
+        """Shift (seconds) to translate a journaled monotonic stamp into
+        the current boot's monotonic domain; 0.0 within the same boot."""
+        if wall is None:
+            return 0.0
+        delta = (wall - mono) - cur_off
+        return delta if abs(delta) > _EPOCH_TOL_S else 0.0
 
     def _replay(self):
+        cur_off = time.time() - time.monotonic()
         with open(self.journal_path) as fh:
             for line in fh:
                 try:
                     rec = json.loads(line)
                 except json.JSONDecodeError:
                     continue        # torn tail write from a crash
+                self._journal_lines += 1
+                if rec.get("event") == "_SNAPSHOT":
+                    stats = dict(rec.get("stats") or {})
+                    snap_off = rec.get("mono_offset")
+                    if snap_off is not None \
+                            and abs(snap_off - cur_off) > _EPOCH_TOL_S:
+                        for b in ("t_min", "t_max"):
+                            if stats.get(b) is not None:
+                                stats[b] += snap_off - cur_off
+                    self._seed_stats(stats)
+                    continue
+                if "event" in rec:              # journaled runtime event
+                    shift = self._epoch_delta(rec.get("wt"), rec["t"],
+                                              cur_off)
+                    if shift:
+                        rec = {**rec, "t": rec["t"] + shift}
+                    self.events.append(rec)
+                    continue
+                if "uid" not in rec:
+                    continue
                 self.tasks[rec["uid"]] = rec
+                self._index_key(rec)
+                # rebuild the STATE stream: every journal line is one
+                # transition, stamped with its monotonic time.  Snapshot
+                # lines ("snap") are latest-state summaries whose history
+                # was compacted away — their aggregate contribution is
+                # carried by the _SNAPSHOT stats line instead.
+                if "mt" in rec and not rec.get("snap"):
+                    mt = rec["mt"] + self._epoch_delta(rec.get("t"),
+                                                       rec["mt"], cur_off)
+                    ev = {"event": "STATE", "uid": rec["uid"],
+                          "state": rec["state"], "t": mt,
+                          "slots": len(rec.get("slot_ids") or ()) or 1,
+                          "pilot": rec.get("pilot")}
+                    self.events.append(ev)
+                    self._ingest(ev)
+
+    def _seed_stats(self, stats: dict):
+        """Restore aggregate counters from a compaction snapshot header."""
+        for k, v in (stats.get("occ") or {}).items():
+            if k in self._occ:
+                self._occ[k] += float(v)
+        self._oh_seeded += float(stats.get("oh_total", 0.0))
+        for bound, pick in (("t_min", min), ("t_max", max)):
+            v = stats.get(bound)
+            if v is not None:
+                cur = getattr(self, f"_{bound}")
+                setattr(self, f"_{bound}",
+                        float(v) if cur is None else pick(cur, float(v)))
 
     # ------------------------------ events ------------------------------ #
     def add_listener(self, cb):
@@ -66,13 +200,24 @@ class StateStore:
 
     def record_event(self, event: str, **fields):
         """Append a non-task runtime event (pilot start, routing, resize,
-        steal, retire)."""
-        rec = {"event": event, "t": time.monotonic(), **fields}
+        steal, retire).  Journaled (write-behind) so a restarted store
+        sees the full runtime event history, not just task states; the
+        wall stamp ("wt") lets replay re-anchor the monotonic stamp after
+        a reboot."""
+        rec = {"event": event, "t": time.monotonic(), "wt": time.time(),
+               **fields}
         with self._lock:
             self.events.append(rec)
-        self._notify(rec)
+            if self._fh is not None:
+                self._wq.append(rec)
+        self._wake_writer()
+        if self._listeners:
+            self._notify(rec)
 
     def record(self, task: TaskRecord, workflow_key: Optional[str] = None):
+        """Append one task transition.  The critical-path cost is a dict
+        merge plus counter updates under the lock; serialization and disk
+        I/O happen on the writer thread (group commit)."""
         rec = {
             "uid": task.uid,
             "key": workflow_key,
@@ -81,86 +226,150 @@ class StateStore:
             "retries": task.retries,
             "slot_ids": list(task.slot_ids),
             "t": time.time(),
+            "mt": time.monotonic(),
         }
         if task.pilot_uid is not None:
             rec["pilot"] = task.pilot_uid
-        if task.state == TaskState.DONE and _jsonable(task.result):
-            rec["result"] = task.result
+        if task.state == TaskState.DONE:
+            # journaled: jsonability is checked by the writer thread (the
+            # dumps is the expensive part) which also unpins the result
+            # from memory if it cannot be serialized.  Journal-less: no
+            # writer will ever strip it, so gate synchronously (PR-2
+            # behavior) rather than pin arbitrary result objects forever.
+            if self._fh is not None or _jsonable(task.result):
+                rec["result"] = task.result
         if task.error is not None:
             rec["error"] = repr(task.error)[:500]
         ev = {
             "event": "STATE", "uid": task.uid,
-            "state": task.state.value, "t": time.monotonic(),
+            "state": task.state.value, "t": rec["mt"],
             "slots": len(task.slot_ids) or 1,
             "pilot": task.pilot_uid,
         }
         with self._lock:
-            prev = self.tasks.get(task.uid, {})
-            if "key" not in rec or rec["key"] is None:
-                rec["key"] = prev.get("key")
-            self.tasks[task.uid] = {**prev, **rec}
+            prev = self.tasks.get(task.uid)
+            if prev:
+                if rec.get("key") is None:
+                    rec["key"] = prev.get("key")
+                merged = {**prev, **rec}
+            else:
+                merged = rec
+            self.tasks[task.uid] = merged
+            self._index_key(merged)
             self.events.append(ev)
-            if self._fh:
-                self._fh.write(json.dumps(self.tasks[task.uid]) + "\n")
-        self._notify(ev)
+            self._ingest(ev)
+            if self._fh is not None:
+                self._wq.append(merged)
+        self._wake_writer()
+        if self._listeners:
+            self._notify(ev)
+
+    def _index_key(self, rec: dict):
+        """Caller holds self._lock.  Latest record wins, except that a
+        completed record (DONE with a result) is only displaced by another
+        record of the *same* task — a later resubmission cannot hide an
+        earlier completion, whether it never finished or finished with a
+        result the writer later strips as non-serializable.  (The old
+        linear scan returned the first completed record in insertion
+        order, which is the same answer.)"""
+        key = rec.get("key")
+        if key is None:
+            return
+        cur = self._by_key.get(key)
+        if (cur is not None and cur.get("uid") != rec.get("uid")
+                and cur.get("state") == TaskState.DONE.value
+                and "result" in cur):
+            return
+        self._by_key[key] = rec
+
+    # ----------------------- incremental counters ----------------------- #
+    def _ingest(self, ev: dict):
+        """Caller holds self._lock.  Fold one STATE event into the cached
+        utilization / timeline / overhead counters.  Equivalent to the old
+        full-stream recomputation because events arrive in time order and
+        the old integration only ever used the *first* occurrence of each
+        state per uid (and the earliest terminal stamp)."""
+        uid, state, t = ev["uid"], ev["state"], ev["t"]
+        self._t_min = t if self._t_min is None else min(self._t_min, t)
+        self._t_max = t if self._t_max is None else max(self._t_max, t)
+        n = max(self._slots_max.get(uid, 1), ev.get("slots", 1))
+        self._slots_max[uid] = n
+        ts = self._timeline.setdefault(uid, {})
+        first = state not in ts
+        if first:
+            ts[state] = t
+        if state == "LAUNCHING" and first and "SCHEDULED" in ts:
+            self._occ["Scheduled"] += n * (t - ts["SCHEDULED"])
+        elif state == "RUNNING" and first and "LAUNCHING" in ts:
+            self._occ["Launching"] += n * (t - ts["LAUNCHING"])
+        elif state in _END_STATES and uid not in self._ended:
+            # earliest terminal stamp: a retried task records FAILED before
+            # its eventual DONE, and crediting through the requeue wait
+            # would overcount Running
+            self._ended.add(uid)
+            if "RUNNING" in ts:
+                self._occ["Running"] += n * max(0.0, t - ts["RUNNING"])
+        # streaming overhead union (see overhead())
+        if state == "SCHEDULED":
+            if uid not in self._oh_opens:
+                self._oh_opens[uid] = t
+                if self._oh_active == 0:
+                    self._oh_ustart = t
+                    self._oh_cur = 0.0
+                self._oh_active += 1
+        elif state in ("RUNNING",) + _END_STATES and uid in self._oh_opens:
+            start = self._oh_opens.pop(uid)
+            if t > start:
+                self._oh_ivals.append((start, t))
+            self._oh_active -= 1
+            if self._oh_active == 0:
+                self._oh_total += t - self._oh_ustart
+                self._oh_cur = 0.0
+            else:
+                self._oh_cur = t - self._oh_ustart
 
     # ------------------------------ queries ----------------------------- #
     def completed_result(self, workflow_key: str):
-        """(found, result) for a previously-DONE task with this key."""
+        """(found, result) for a previously-DONE task with this key.
+        O(1): one indexed lookup, no record scan."""
         with self._lock:
-            for rec in self.tasks.values():
-                if rec.get("key") == workflow_key and \
-                        rec.get("state") == TaskState.DONE.value and \
-                        "result" in rec:
-                    return True, rec["result"]
+            rec = self._by_key.get(workflow_key)
+            if rec is not None and \
+                    rec.get("state") == TaskState.DONE.value and \
+                    "result" in rec:
+                return True, rec["result"]
         return False, None
 
     def states(self) -> Dict[str, str]:
         with self._lock:
             return {uid: r.get("state", "?") for uid, r in self.tasks.items()}
 
-    def timeline(self) -> Dict[str, Dict[str, float]]:
-        """{uid: {state: monotonic_t}} reconstructed from the event stream
-        (first occurrence of each state wins, matching TaskRecord stamps)."""
-        out: Dict[str, Dict[str, float]] = {}
+    def events_snapshot(self) -> List[dict]:
+        """Consistent copy of the unified event stream."""
         with self._lock:
-            for e in self.events:
-                if e.get("event") != "STATE":
-                    continue
-                ts = out.setdefault(e["uid"], {})
-                ts.setdefault(e["state"], e["t"])
-        return out
+            return list(self.events)
+
+    def timeline(self) -> Dict[str, Dict[str, float]]:
+        """{uid: {state: monotonic_t}} — first occurrence of each state
+        wins, matching TaskRecord stamps.  Served from the incrementally
+        maintained cache (no event-stream scan)."""
+        with self._lock:
+            return {uid: dict(ts) for uid, ts in self._timeline.items()}
 
     def utilization(self, capacity: int,
                     t0: Optional[float] = None,
                     t1: Optional[float] = None) -> Dict[str, float]:
-        """Fig. 6 breakdown from the event stream: fraction of slot-seconds
-        in Scheduled / Launching / Running / Idle over [t0, t1]."""
-        slots: Dict[str, int] = {}
+        """Fig. 6 breakdown: fraction of slot-seconds in Scheduled /
+        Launching / Running / Idle over [t0, t1].  Reads the cached
+        integrals — O(1) in the number of events."""
         with self._lock:
-            events = [e for e in self.events if e.get("event") == "STATE"]
-        for e in events:
-            slots[e["uid"]] = max(slots.get(e["uid"], 1), e.get("slots", 1))
-        tl = self.timeline()
-        if not tl:
+            occ = dict(self._occ)
+            lo, hi = self._t_min, self._t_max
+        if lo is None:
             return {"Scheduled": 0.0, "Launching": 0.0, "Running": 0.0,
                     "Idle": 1.0}
-        all_t = [t for ts in tl.values() for t in ts.values()]
-        t0 = t0 if t0 is not None else min(all_t)
-        t1 = t1 if t1 is not None else max(all_t)
-        occ = {"Scheduled": 0.0, "Launching": 0.0, "Running": 0.0}
-        for uid, ts in tl.items():
-            n = slots.get(uid, 1)
-            if "SCHEDULED" in ts and "LAUNCHING" in ts:
-                occ["Scheduled"] += n * (ts["LAUNCHING"] - ts["SCHEDULED"])
-            if "LAUNCHING" in ts and "RUNNING" in ts:
-                occ["Launching"] += n * (ts["RUNNING"] - ts["LAUNCHING"])
-            # earliest terminal stamp: a retried task records FAILED before
-            # its eventual DONE, and crediting through the requeue wait
-            # would overcount Running
-            ends = [ts[s] for s in _END_STATES if s in ts]
-            if "RUNNING" in ts and ends:
-                occ["Running"] += n * max(0.0, min(ends) - ts["RUNNING"])
+        t0 = t0 if t0 is not None else lo
+        t1 = t1 if t1 is not None else hi
         total = max(capacity * (t1 - t0), 1e-12)
         scale = min(1.0, total / max(sum(occ.values()), 1e-12))
         occ = {k: v * scale for k, v in occ.items()}
@@ -168,10 +377,212 @@ class StateStore:
         out["Idle"] = max(0.0, 1.0 - sum(out.values()))
         return out
 
+    def overhead(self) -> float:
+        """RP overhead (this store only): wall-clock union of
+        [SCHEDULED, RUNNING) intervals, maintained incrementally, plus
+        any pre-compaction overhead carried by a snapshot header."""
+        with self._lock:
+            return self._oh_seeded + self._oh_total + self._oh_cur
+
+    def overhead_base(self) -> float:
+        """Overhead accumulated before the last journal compaction: its
+        intervals were snapshotted away, only the integral survives."""
+        with self._lock:
+            return self._oh_seeded
+
+    def overhead_intervals(self) -> List[Tuple[float, float]]:
+        """Closed [SCHEDULED, RUNNING) intervals for cross-pilot union
+        (see RPEXExecutor.rp_overhead) — one per launch attempt, so the
+        multi-pilot merge unions O(tasks) intervals instead of re-deriving
+        them from O(events) stream records."""
+        with self._lock:
+            return list(self._oh_ivals)
+
+    # --------------------------- write-behind ---------------------------- #
+    def _wake_writer(self):
+        if self._writer is None:
+            return
+        if len(self._wq) >= self._max_queue:
+            # backpressure: never holds self._lock, so the writer (which
+            # takes self._lock briefly when compacting) can always drain.
+            # Soft-bounded: record() runs under scheduler locks (e.g. the
+            # Agent's condition variable on the submit fast path), so a
+            # saturated writer throttles producers briefly but must never
+            # wedge them — the queue transiently overshoots instead.
+            with self._wcv:
+                self._wcv.notify_all()
+                deadline = time.monotonic() + 0.25
+                while (len(self._wq) >= self._max_queue
+                       and not self._wstop
+                       and time.monotonic() < deadline):
+                    self._wcv.wait(0.05)
+            return
+        # fast path: only pay the cv acquisition when the writer is parked.
+        # The unlocked flag read can race (writer parking concurrently) —
+        # the writer's timed wait bounds a missed wake at ~50ms of extra
+        # journal lag, never a lost record; flush()/close() always notify.
+        if self._wsleeping:
+            with self._wcv:
+                self._wcv.notify_all()
+
+    def _writer_loop(self):
+        while True:
+            with self._wcv:
+                while not self._wq and not self._wstop:
+                    self._wsleeping = True
+                    self._wcv.wait(0.05)
+                self._wsleeping = False
+                batch = []
+                while self._wq:
+                    batch.append(self._wq.popleft())
+                stop = self._wstop
+                self._winflight = len(batch)
+                self._wcv.notify_all()      # free any backpressured producer
+            if batch:
+                try:
+                    self._write_batch(batch)
+                    self._maybe_compact()
+                except Exception as e:  # noqa: BLE001 — disk-full etc.:
+                    # the journal goes dead but the store must stay live.
+                    # The old synchronous path surfaced I/O errors to the
+                    # caller; here the writer marks the store journal-dead
+                    # (record() stops enqueuing, queue discarded) instead
+                    # of dying silently and wedging producers in
+                    # backpressure forever.
+                    self._journal_dead(e)
+                with self._wcv:
+                    self._winflight = 0
+                    self._wcv.notify_all()  # flush() waits on durability
+            if stop:
+                with self._wcv:
+                    if not self._wq:        # drained: safe to exit
+                        return
+
+    def _journal_dead(self, err: Exception):
+        with self._lock:
+            self.journal_error = repr(err)
+            if self._fh is not None:
+                try:
+                    self._fh.close()
+                except Exception:  # noqa: BLE001
+                    pass
+                self._fh = None
+        with self._wcv:
+            self._wq.clear()
+            self._wcv.notify_all()
+
+    def _write_batch(self, batch: List[dict]):
+        """Group commit: serialize the whole drain cycle, one write + one
+        flush.  Records whose result had to be dropped from the line are
+        also stripped from the in-memory maps — otherwise every large
+        non-serializable result (e.g. device arrays) stays pinned for the
+        store's lifetime, which the old synchronous probe never allowed."""
+        if self._fh is None:
+            return
+        lines = []
+        slimmed: List[dict] = []
+        for rec in batch:
+            line, dropped = self._dumps(rec)
+            lines.append(line)
+            if dropped:
+                slimmed.append(rec)
+        if slimmed:
+            with self._lock:
+                for rec in slimmed:
+                    rec.pop("result", None)
+        try:
+            self._fh.write("".join(lines))
+            self._fh.flush()
+        except ValueError:                  # closed mid-write during close()
+            return
+        self._journal_lines += len(lines)
+
+    @staticmethod
+    def _dumps(rec: dict) -> Tuple[str, bool]:
+        """(journal line, result_dropped) — serialization failures fall
+        back to slimmer forms instead of losing the whole record."""
+        try:
+            return json.dumps(rec) + "\n", False
+        except (TypeError, ValueError):
+            slim = {k: v for k, v in rec.items() if k != "result"}
+            try:
+                return json.dumps(slim) + "\n", "result" in rec
+            except (TypeError, ValueError):
+                return json.dumps({k: v for k, v in slim.items()
+                                   if _jsonable(v)}) + "\n", "result" in rec
+
+    def _maybe_compact(self):
+        """Writer thread only: when the journal holds many times more
+        lines than live task records, rewrite it as a snapshot (one line
+        per task + one stats header) and keep appending — so a long
+        elastic run's restart replays O(tasks), not O(transitions)."""
+        threshold = max(self._compact_min_lines,
+                        self._compact_factor * max(1, len(self.tasks)))
+        if self._journal_lines < threshold or self._fh is None:
+            return
+        with self._lock:
+            # Records still queued are already folded into the counters
+            # and the task map being snapshotted — letting them land in
+            # the tail afterwards would make a restart ingest them twice,
+            # so the queue is dropped (snapshot covers it).  Runtime
+            # events — flushed or queued — are re-emitted from the
+            # in-memory stream so pilot-lifecycle history (PILOT_START /
+            # STOLEN / GROW / PILOT_RETIRE ...) survives compaction;
+            # only per-task ROUTED events are left out (high cardinality,
+            # and each task record carries its "pilot" binding anyway).
+            self._wq.clear()
+            snap = [dict(rec, snap=True) for rec in self.tasks.values()]
+            kept_events = [e for e in self.events
+                           if e.get("event") not in (None, "STATE",
+                                                     "ROUTED")]
+            stats = {"occ": dict(self._occ),
+                     "oh_total": (self._oh_seeded + self._oh_total
+                                  + self._oh_cur),
+                     "t_min": self._t_min, "t_max": self._t_max}
+        tmp = self.journal_path.with_name(self.journal_path.name
+                                          + ".compact.tmp")
+        with open(tmp, "w") as out:
+            out.write(json.dumps({"event": "_SNAPSHOT",
+                                  "t": time.monotonic(),
+                                  "mono_offset": (time.time()
+                                                  - time.monotonic()),
+                                  "stats": stats}) + "\n")
+            for rec in snap:
+                out.write(self._dumps(rec)[0])
+            for rec in kept_events:
+                out.write(self._dumps(rec)[0])
+            out.flush()
+            os.fsync(out.fileno())
+        self._fh.close()
+        os.replace(tmp, self.journal_path)   # atomic: never a torn journal
+        self._fh = open(self.journal_path, "a")
+        self._journal_lines = len(snap) + len(kept_events) + 1
+
+    def flush(self, timeout: float = 10.0) -> bool:
+        """Block until every queued journal record has been written."""
+        if self._writer is None:
+            return True
+        deadline = time.monotonic() + timeout
+        with self._wcv:
+            self._wcv.notify_all()
+            while self._wq or self._winflight:
+                left = deadline - time.monotonic()
+                if left <= 0:
+                    return False
+                self._wcv.wait(min(left, 0.05))
+        return True
+
     def close(self):
-        # under the lock: a late task completion (e.g. one that outlived a
-        # drain timeout) may be mid-record; after this, its journal write
-        # is skipped (memory-only) instead of hitting a closed handle
+        """Drain the write-behind queue, then close the journal.  A task
+        completing after close() is recorded in memory only (its journal
+        write is skipped) instead of hitting a closed handle."""
+        writer = self._writer
+        if writer is not None:
+            with self._wcv:
+                self._wstop = True
+                self._wcv.notify_all()
+            writer.join(timeout=10.0)
+            self._writer = None
         with self._lock:
             if self._fh:
                 self._fh.close()
@@ -186,8 +597,25 @@ def _jsonable(x) -> bool:
         return False
 
 
+def union_intervals(ivals: List[Tuple[float, float]]) -> float:
+    """Total length of the union of (start, end) intervals."""
+    total = 0.0
+    cur_start: Optional[float] = None
+    cur_end = 0.0
+    for s, t in sorted(ivals):
+        if cur_start is None or s > cur_end:
+            if cur_start is not None:
+                total += cur_end - cur_start
+            cur_start, cur_end = s, t
+        else:
+            cur_end = max(cur_end, t)
+    if cur_start is not None:
+        total += cur_end - cur_start
+    return total
+
+
 def overhead_from_events(events: List[dict]) -> float:
-    """RP overhead recomputed from the unified event stream: wall-clock
+    """RP overhead recomputed from a unified event stream: wall-clock
     seconds during which the runtime was placing or launching at least one
     task — the union (not the per-task sum) of every [SCHEDULED, RUNNING)
     interval observed in the stream.
@@ -200,9 +628,13 @@ def overhead_from_events(events: List[dict]) -> float:
     and overlapping intervals are merged before integrating.  Slot-idle
     gaps between dependent tasks contribute nothing: no task is in
     SCHEDULED/LAUNCHING there, so no interval covers the gap.
+
+    Live stores maintain this incrementally (StateStore.overhead /
+    overhead_intervals); this offline form remains for synthetic streams
+    and merged multi-pilot event dumps.
     """
     opens: Dict[str, float] = {}            # uid -> t of pending SCHEDULED
-    ivals: List[tuple] = []
+    ivals: List[Tuple[float, float]] = []
     for e in sorted((e for e in events if e.get("event") == "STATE"),
                     key=lambda e: e["t"]):
         uid, state, t = e["uid"], e["state"], e["t"]
@@ -214,17 +646,4 @@ def overhead_from_events(events: List[dict]) -> float:
             start = opens.pop(uid)
             if t > start:
                 ivals.append((start, t))
-    ivals.sort()
-    total = 0.0
-    cur_start: Optional[float] = None
-    cur_end = 0.0
-    for s, t in ivals:
-        if cur_start is None or s > cur_end:
-            if cur_start is not None:
-                total += cur_end - cur_start
-            cur_start, cur_end = s, t
-        else:
-            cur_end = max(cur_end, t)
-    if cur_start is not None:
-        total += cur_end - cur_start
-    return total
+    return union_intervals(ivals)

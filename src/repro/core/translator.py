@@ -44,9 +44,9 @@ def translate(fn: Callable, args: tuple, kwargs: dict,
               resources: Optional[ResourceSpec] = None,
               max_retries: int = 0) -> TaskRecord:
     """Capability (ii): 1:1 Parsl-task -> pilot-task translation."""
-    kind = detect_kind(fn)
+    app_kind = kind = detect_kind(fn)   # classify once: translate() runs
     res = resources or getattr(fn, "__resources__", None) or ResourceSpec()
-    body = fn
+    body = fn                           # per task on the submit hot path
     if kind == "bash":
         body = _bash_runner(fn)
         kind = "python"  # executed as a single-slot callable wrapping a proc
@@ -58,7 +58,7 @@ def translate(fn: Callable, args: tuple, kwargs: dict,
     task = TaskRecord(
         uid=new_uid("task"), kind=kind, fn=body, args=args, kwargs=kwargs,
         resources=res, max_retries=max_retries,
-        app_kind=detect_kind(fn),
+        app_kind=app_kind,
         sticky=res.sticky,
         res_kind=res.res_kind or (
             "device" if kind == "spmd" and not res.cpu_only else "cpu"))

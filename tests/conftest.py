@@ -1,0 +1,40 @@
+"""Shared test harness pieces.
+
+``@pytest.mark.timeout(seconds)`` — wall-clock cap for a single test,
+enforced with SIGALRM (no third-party plugin in the container).  Used to
+cap journal-heavy StateStore tests so a write-behind deadlock fails fast
+with a traceback instead of wedging the whole CI job.  If pytest-timeout
+is installed it takes over (its hook runs instead); on platforms without
+SIGALRM the marker is a no-op.
+"""
+import signal
+
+import pytest
+
+_HAS_ALARM = hasattr(signal, "SIGALRM")
+_HAS_PLUGIN = False
+try:                                    # defer to the real plugin if present
+    import pytest_timeout  # noqa: F401
+    _HAS_PLUGIN = True
+except ImportError:
+    pass
+
+
+@pytest.hookimpl(wrapper=True)
+def pytest_runtest_call(item):
+    marker = item.get_closest_marker("timeout")
+    if marker is None or not _HAS_ALARM or _HAS_PLUGIN:
+        return (yield)
+    seconds = int(marker.args[0]) if marker.args else 60
+
+    def _expired(signum, frame):
+        raise TimeoutError(
+            f"test exceeded timeout marker ({seconds}s): {item.nodeid}")
+
+    old = signal.signal(signal.SIGALRM, _expired)
+    signal.alarm(seconds)
+    try:
+        return (yield)
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old)
