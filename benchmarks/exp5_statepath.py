@@ -345,9 +345,6 @@ def main(argv=None):
                           ("tasks", "records", "lookups", "producers",
                            "slots", "repeats")}}
 
-    def best(fn, *a):
-        return min(fn(*a) for _ in range(max(1, args.repeats)))
-
     def fresh(name, i):
         p = scratch / f"{name}_{i[0]}.jsonl"
         i[0] += 1
@@ -357,18 +354,34 @@ def main(argv=None):
 
     try:
         print("# record path: journaled lifecycle, per task")
+        # interleave the A/B repeats: running all baseline samples before
+        # all candidate samples lets slow machine drift (shared-container
+        # load, frequency scaling) land entirely on one side of the
+        # ratio; alternating samples both sides across the same windows,
+        # so min-of-N estimates both floors under comparable conditions
         i = [0]
-        sync_rec = best(lambda: bench_record(
-            SyncStateStore, args.tasks, fresh("sync", i)))
-        wb_rec = best(lambda: bench_record(
-            StateStore, args.tasks, fresh("wb", i)))
-        rec_speedup = sync_rec / wb_rec
+        sync_samples, wb_samples = [], []
+        for _ in range(max(1, args.repeats)):
+            sync_samples.append(bench_record(
+                SyncStateStore, args.tasks, fresh("sync", i)))
+            wb_samples.append(bench_record(
+                StateStore, args.tasks, fresh("wb", i)))
+        sync_rec, wb_rec = min(sync_samples), min(wb_samples)
+        # gate statistic: the *median per-window ratio*.  Each interleaved
+        # repeat is one window in which both sides ran back to back, so
+        # its ratio is drift-free; the median across windows discards the
+        # windows a background burst poisoned.  (The ratio of global
+        # minima mixes floors from different windows and swings past the
+        # gate either way on a shared 2-core container.)
+        pair = sorted(s / w for s, w in zip(sync_samples, wb_samples))
+        rec_speedup = pair[len(pair) // 2]
         results["record"] = {"sync_us_per_task": sync_rec * 1e6,
                              "write_behind_us_per_task": wb_rec * 1e6,
-                             "speedup": rec_speedup}
+                             "speedup": rec_speedup,
+                             "speedup_of_mins": sync_rec / wb_rec}
         print(f"  sync (PR-2):    {sync_rec * 1e6:9.1f} us/task")
         print(f"  write-behind:   {wb_rec * 1e6:9.1f} us/task"
-              f"   ({rec_speedup:.1f}x lower)")
+              f"   ({rec_speedup:.1f}x lower, median window ratio)")
 
         print("# completed_result: restart lookup latency")
         sync_lk = bench_lookup(SyncStateStore, args.records, args.lookups,
@@ -386,10 +399,12 @@ def main(argv=None):
               f"   ({lk_speedup:.0f}x lower)")
 
         print(f"# dependency resolution: {args.producers}-wide fan-in/out")
-        base = [bench_fanin(BaselineDFK, args.producers, args.slots)
-                for _ in range(max(1, args.repeats))]
-        new = [bench_fanin(DataFlowKernel, args.producers, args.slots)
-               for _ in range(max(1, args.repeats))]
+        base, new = [], []
+        for _ in range(max(1, args.repeats)):     # interleaved (see above)
+            base.append(bench_fanin(BaselineDFK, args.producers,
+                                    args.slots))
+            new.append(bench_fanin(DataFlowKernel, args.producers,
+                                   args.slots))
 
         def mins(rows, k):
             return min(r[k] for r in rows)

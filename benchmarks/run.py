@@ -7,9 +7,10 @@
   roofline -> §Roofline table from the dry-run artifacts (assignment)
 
 The gated runtime benchmarks (exp3 throughput, exp4 balance, exp5 state
-path) each emit a canonical ``BENCH_*.json`` at the repo root so the perf
-trajectory is tracked across PRs; ``--bench-summary`` aggregates whatever
-artifacts are present into one table without re-running anything.
+path, exp6 locality) each emit a canonical ``BENCH_*.json`` at the repo
+root so the perf trajectory is tracked across PRs; ``--bench-summary``
+aggregates whatever artifacts are present into one table without
+re-running anything.
 
 Prints ``name,us_per_call,derived`` CSV summary lines at the end.
 """
@@ -40,6 +41,12 @@ _BENCH_HEADLINES = {
         (("record", "speedup"), "vs sync", "{:.1f}x"),
         (("lookup", "speedup"), "lookup vs scan", "{:.0f}x"),
         (("fanin", "speedup"), "fan-in vs PR-2", "{:.1f}x"),
+    ],
+    "BENCH_locality.json": [
+        (("locality", "hops_total"), "locality hops", "{:d}"),
+        (("least_loaded", "hops_total"), "least-loaded hops", "{:d}"),
+        (("hop_ratio",), "hop reduction", "{:.1f}x"),
+        (("makespan_ratio",), "makespan ratio", "{:.2f}"),
     ],
 }
 

@@ -4,16 +4,21 @@ claim, end to end.
 One RPEXExecutor owns two pilots with distinct descriptions: a "cpu" pilot
 that accepts pure-Python pre/post-processing tasks and a "device" pilot
 that accepts SPMD tasks.  The translator stamps every task's resource
-kind; the TaskManager late-binds each task to the least-loaded compatible
-pilot.  The workflow below is the Colmena shape: per item a Python
-pre-process, an SPMD simulation on a device sub-mesh, and a Python
+kind; the TaskManager late-binds each task to a compatible pilot chosen
+by the executor's placement policy — here LocalityAware, so whenever
+several compatible pilots could take a task (e.g. the elastic cpu pilots
+of part 2), the one already holding its input data wins
+(docs/placement.md).  The workflow below is the Colmena shape: per item a
+Python pre-process, an SPMD simulation on a device sub-mesh, and a Python
 collector, with dataflow dependencies between them.
 
-Part 2 demos elasticity: the same executor given a PoolScaler template
-spawns an extra CPU pilot when a burst of pre-processing tasks backs up
-the queue (PILOT_START), steals the backlog onto it (STOLEN), and drains
-+ retires it once the burst passes (PILOT_RETIRE) — watch the event
-stream printed at the end.
+Part 2 demos elasticity: the same executor given PoolScaler *templates*
+spawns an extra pilot when a burst of pre-processing tasks backs up the
+queue (PILOT_START) — the placement policy picks the template whose kinds
+match the starving queue (here the python backlog spawns the cpu
+template, never the device one) — steals the backlog onto it (STOLEN),
+and drains + retires it once the burst passes (PILOT_RETIRE) — watch the
+event stream printed at the end.
 
 Run: PYTHONPATH=src python examples/heterogeneous_pilots.py
 """
@@ -55,11 +60,19 @@ def main():
                              name="cpu"),
             PilotDescription(n_slots=8, kinds=("spmd",), name="device"),
         ],
-        # elastic: spawn up to 2 extra CPU pilots when queue wait builds,
-        # retire them after ~0.5s idle (knobs: docs/elasticity.md)
+        # consumers follow the pilots that hold their input data
+        placement="locality",
+        # elastic: spawn up to 2 extra pilots when queue wait builds,
+        # retire them after ~0.5s idle (knobs: docs/elasticity.md); with
+        # several templates the placement policy spawns the one whose
+        # kinds cover the starving queue (docs/placement.md)
         scaler=ScalerConfig(
-            template=PilotDescription(n_slots=4, kinds=("python", "bash"),
-                                      name="elastic"),
+            templates=[
+                PilotDescription(n_slots=4, kinds=("python", "bash"),
+                                 name="elastic-cpu"),
+                PilotDescription(n_slots=8, kinds=("spmd",),
+                                 name="elastic-dev"),
+            ],
             min_pilots=2, max_pilots=4,
             scale_up_wait_s=0.15, scale_down_idle_s=0.5,
             spawn_cooldown_s=0.3),

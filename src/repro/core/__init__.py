@@ -4,6 +4,7 @@ Public API:
     DataFlowKernel, python_app, spmd_app, bash_app   (Parsl side)
     RPEXExecutor, PilotDescription                   (the integration)
     PilotManager, TaskManager, Agent, SlotScheduler  (RP side)
+    PlacementPolicy, LeastLoaded, LocalityAware      (placement layer)
 """
 from .agent import Agent
 from .apps import bash_app, python_app, spmd_app
@@ -13,6 +14,9 @@ from .futures import (AppFuture, ResourceSpec, TaskRecord, TaskState,
                       new_uid)
 from .pilot import (Pilot, PilotDescription, PilotManager, PilotPool,
                     PoolScaler, ScalerConfig, TaskManager)
+from .placement import (LeastLoaded, LocalityAware, PlacementPolicy,
+                        affinity_match, prefer_free_slots,
+                        prefer_specialized, resolve_policy)
 from .rpex import RPEXExecutor
 from .scheduler import SlotScheduler
 from .spmd_executor import SPMDFunctionExecutor
@@ -20,11 +24,13 @@ from .store import StateStore, overhead_from_events, union_intervals
 from .translator import bind_future, detect_kind, translate
 
 __all__ = [
-    "Agent", "AppFuture", "DataFlowKernel", "Executor", "ParslTask",
-    "Pilot", "PilotDescription", "PilotManager", "PilotPool", "PoolScaler",
+    "Agent", "AppFuture", "DataFlowKernel", "Executor", "LeastLoaded",
+    "LocalityAware", "ParslTask", "Pilot", "PilotDescription",
+    "PilotManager", "PilotPool", "PlacementPolicy", "PoolScaler",
     "RPEXExecutor", "ResourceSpec", "SPMDFunctionExecutor", "ScalerConfig",
     "SlotScheduler", "StateStore", "TaskManager", "TaskRecord", "TaskState",
-    "ThreadPoolExecutor", "bash_app", "bind_future", "current_dfk",
-    "detect_kind", "new_uid", "overhead_from_events", "python_app",
-    "spmd_app", "translate", "union_intervals",
+    "ThreadPoolExecutor", "affinity_match", "bash_app", "bind_future",
+    "current_dfk", "detect_kind", "new_uid", "overhead_from_events",
+    "prefer_free_slots", "prefer_specialized", "python_app",
+    "resolve_policy", "spmd_app", "translate", "union_intervals",
 ]

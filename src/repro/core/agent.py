@@ -249,6 +249,21 @@ class Agent:
         with self._cv:
             return max(0, self._queued_slots)
 
+    def queued_task_kinds(self) -> List[Tuple[Tuple[str, ...], int]]:
+        """One entry per queued-but-not-dispatched task: (the identifiers
+        it routes under — kind, pre-translation app kind, resource kind —
+        deduplicated, None dropped; its slot demand).  The PoolScaler
+        aggregates these across pilots into the starving-queue signal the
+        placement policy's ``pick_template`` matches against when more
+        than one scale-up template is configured."""
+        with self._cv:
+            return [
+                (tuple(dict.fromkeys(
+                    k for k in (t.kind, t.app_kind, t.res_kind)
+                    if k is not None)),
+                 t.resources.slots)
+                for _, _, t in self._wait if t.state not in TERMINAL]
+
     def oldest_queued_wait(self, now: Optional[float] = None) -> float:
         """Seconds the longest-waiting queued task has sat unscheduled —
         the PoolScaler's scale-up signal.  0.0 when the queue is empty."""
@@ -281,7 +296,10 @@ class Agent:
         with the task, so `shutdown(wait=True)` and `load()` stay correct
         on the victim.  Sticky tasks and straggler replicas are never
         handed out (replicas' first-finisher-wins bookkeeping is pilot-
-        local); `pred=None` takes everything else (the drain path).
+        local) — ``sticky`` is the *hard* eligibility pin enforced here,
+        while soft placement-policy gates (e.g. LocalityAware's
+        affinity-vs-imbalance test) arrive composed into ``pred`` by the
+        pool; `pred=None` takes everything else (the drain path).
         """
         taken: List[Tuple[TaskRecord, Optional[Callable]]] = []
         with self._cv:

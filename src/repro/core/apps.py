@@ -10,7 +10,7 @@ users to define those parameters").
 from __future__ import annotations
 
 import functools
-from typing import Callable, Optional, Tuple
+from typing import Callable, Optional, Sequence, Tuple
 
 from .dfk import current_dfk
 from .futures import AppFuture, ResourceSpec
@@ -32,13 +32,18 @@ def _mk_app(fn: Callable, kind: str, resources: ResourceSpec,
 
 
 def python_app(fn=None, *, retries: int = 0, executor: Optional[str] = None,
-               slots: int = 1, sticky: bool = False):
+               slots: int = 1, sticky: bool = False,
+               affinity: Sequence[str] = ()):
     """sticky=True pins every invocation to the pilot it was routed to:
     the task is never migrated by inter-pilot work stealing (use for tasks
-    with pilot-local state or data affinity)."""
+    with pilot-local state or data affinity).  ``affinity`` is the soft
+    sibling: pilot uids/names this app's input data lives on; a
+    LocalityAware placement policy scores routing toward them (merged
+    with the producer pilots the dep manager discovers at run time)."""
     def deco(f):
         return _mk_app(f, "python", ResourceSpec(slots=slots, cpu_only=True,
-                                                 sticky=sticky),
+                                                 sticky=sticky,
+                                                 affinity=tuple(affinity)),
                        retries, executor)
     return deco(fn) if fn is not None else deco
 
@@ -46,15 +51,19 @@ def python_app(fn=None, *, retries: int = 0, executor: Optional[str] = None,
 def spmd_app(fn=None, *, slots: int = 1,
              mesh: Optional[Tuple[int, int]] = None, retries: int = 0,
              executor: Optional[str] = None, priority: int = 0,
-             jit: bool = True, sticky: bool = False):
+             jit: bool = True, sticky: bool = False,
+             affinity: Sequence[str] = ()):
     """jit=False for bodies that manage their own jit (e.g. a training
     segment calling a pre-jitted step) or that are not traceable.
-    sticky=True exempts the task from inter-pilot work stealing."""
+    sticky=True exempts the task from inter-pilot work stealing;
+    ``affinity`` names pilots holding this app's input arrays (soft
+    data-locality hint for LocalityAware placement)."""
     def deco(f):
         f.__spmd_jit__ = jit
         return _mk_app(f, "spmd",
                        ResourceSpec(slots=slots, mesh_shape=mesh,
-                                    priority=priority, sticky=sticky),
+                                    priority=priority, sticky=sticky,
+                                    affinity=tuple(affinity)),
                        retries, executor)
     return deco(fn) if fn is not None else deco
 

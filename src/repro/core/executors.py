@@ -14,18 +14,22 @@ from .translator import bind_future, translate
 class ParslTask:
     """What the DFK hands an executor: the app + resolved args, plus the
     executor-kind hint the DFK resolved for it (threaded through so bulk
-    batches and pilot routing can see where the task was bound)."""
+    batches and pilot routing can see where the task was bound) and the
+    data-affinity hint (the pilots that produced this task's inputs,
+    recorded by the dep manager for locality-aware placement)."""
 
     __slots__ = ("fn", "args", "kwargs", "resources", "retries", "key",
-                 "executor")
+                 "executor", "affinity")
 
     def __init__(self, fn, args, kwargs, resources=None, retries=0,
-                 key: Optional[str] = None, executor: Optional[str] = None):
+                 key: Optional[str] = None, executor: Optional[str] = None,
+                 affinity: Tuple[str, ...] = ()):
         self.fn, self.args, self.kwargs = fn, args, kwargs
         self.resources = resources
         self.retries = retries
         self.key = key
         self.executor = executor
+        self.affinity = affinity
 
 
 class Executor:

@@ -56,6 +56,10 @@ class ResourceSpec:
     sticky: bool = False            # pin to the routed pilot: never migrated
                                     # by work stealing (e.g. tasks with
                                     # pilot-local state or data affinity)
+    affinity: Tuple[str, ...] = ()  # data-affinity hints: pilot uids/names
+                                    # holding this task's input arrays; a
+                                    # LocalityAware policy scores placement
+                                    # toward them (soft, unlike sticky)
 
     def __post_init__(self):
         if self.slots < 1:
@@ -91,6 +95,9 @@ class TaskRecord:
     pilot_uid: Optional[str] = None  # late-bound by PilotPool routing;
                                      # re-stamped if the task is stolen
     sticky: bool = False            # steal-eligibility stamp (translator)
+    affinity: Tuple[str, ...] = ()  # data-affinity stamp (translator):
+                                    # producer pilots + ResourceSpec hints;
+                                    # scored by LocalityAware placement
 
     def transition(self, state: TaskState, store=None):
         self.state = state

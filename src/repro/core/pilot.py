@@ -10,19 +10,27 @@ Heterogeneous resources enter through the PilotPool: a pool owns N pilots
 with distinct PilotDescriptions (e.g. a CPU pilot for pre/post-processing
 Python tasks and a device pilot for SPMD tasks).  Each description may
 restrict the task kinds it accepts; the TaskManager *late-binds* every
-translated task to the least-loaded compatible pilot at submission time —
-the paper's "heterogeneous tasks on heterogeneous resources" claim made
-operational.
+translated task to a compatible pilot at submission time — the paper's
+"heterogeneous tasks on heterogeneous resources" claim made operational.
+
+*Which* compatible pilot is a policy question, and since PR 4 the pool
+delegates it to a pluggable ``PlacementPolicy`` (see placement.py):
+routing (``route``/``route_bulk``), steal-victim ordering and per-task
+steal eligibility (``request_work``), and scaler template choice all ask
+the policy.  ``LeastLoaded`` (the default) reproduces the PR-2 behavior
+exactly; ``LocalityAware`` scores data affinity against load.
 
 Since PR 2 the binding is no longer immutable: the pool is an active load
 balancer.  When a pilot's agent goes hungry (empty wait heap, free slots)
 its ``idle_cb`` asks the pool for work and the pool *steals* queued-but-
-not-dispatched compatible tasks from the most-loaded sibling, re-stamping
+not-dispatched compatible tasks from a policy-ordered victim, re-stamping
 ``pilot_uid`` and emitting a STOLEN event so TaskManager bookkeeping and
 journal replay stay correct.  A PoolScaler can additionally grow and
 shrink the pilot set itself: it watches the unified StateStore event
 streams, spawns a new pilot from a template description when queue wait
-exceeds a threshold, and drains + retires idle pilots (PILOT_RETIRE).
+exceeds a threshold (multi-template: the policy picks the template whose
+kinds match the starving queue), and drains + retires idle pilots
+(PILOT_RETIRE).
 """
 from __future__ import annotations
 
@@ -36,6 +44,7 @@ import jax
 
 from .agent import Agent
 from .futures import ResourceSpec, TaskRecord, TaskState, new_uid
+from .placement import PlacementPolicy, resolve_policy
 from .scheduler import SlotScheduler
 from .spmd_executor import SPMDFunctionExecutor
 from .store import StateStore
@@ -151,15 +160,17 @@ class PilotPool:
 
     The pool is also the steal coordinator and the elastic-membership
     authority: agents' idle hooks call ``request_work`` to migrate queued
-    tasks off the most-loaded sibling, ``add_pilot``/``retire`` grow and
+    tasks off a policy-ordered victim, ``add_pilot``/``retire`` grow and
     shrink the pilot set at runtime, and migrate hooks let the TaskManager
     keep its bookkeeping (journal keys, task map) correct when a task's
-    pilot binding changes after submission."""
+    pilot binding changes after submission.  The pool is pure mechanism:
+    every *which pilot* decision is delegated to ``self.policy``."""
 
     def __init__(self,
                  descs: Optional[Sequence[PilotDescription]] = None,
                  pilots: Optional[Sequence[Pilot]] = None,
-                 steal: bool = True):
+                 steal: bool = True,
+                 policy: Union[None, str, PlacementPolicy] = None):
         if pilots is None and descs is None:
             descs = [PilotDescription()]
         self.pilots: List[Pilot] = (list(pilots) if pilots is not None
@@ -168,6 +179,7 @@ class PilotPool:
             raise ValueError("PilotPool needs at least one pilot")
         self.retired: List[Pilot] = []
         self.steal_enabled = steal
+        self.policy = resolve_policy(policy)
         self._lock = threading.RLock()
         self._migrate_hooks: List[Callable] = []
         self._closed = False
@@ -207,30 +219,28 @@ class PilotPool:
         return compat
 
     def route(self, task: TaskRecord) -> Pilot:
-        """Least-loaded pilot whose description accepts the task."""
-        return min(self._compatible(task), key=lambda p: p.load())
+        """The policy's pick among pilots whose description accepts the
+        task (least-loaded under the default policy)."""
+        return self.policy.place(task, self._compatible(task))
 
     def route_bulk(self, tasks: Sequence[TaskRecord]
                    ) -> List[Union[Pilot, Exception]]:
-        """Greedy least-loaded assignment for a whole batch: the running
-        load estimate includes the demand routed earlier in this batch, so
-        a bulk submission spreads across compatible pilots instead of
+        """Greedy policy assignment for a whole batch: the running load
+        estimate includes the demand routed earlier in this batch, so a
+        bulk submission spreads across compatible pilots instead of
         piling onto whichever was idle when the batch arrived.  An
         unroutable task yields its RuntimeError in place of a pilot, so
         one bad task never aborts the rest of the batch."""
         pilots = self.active()
         loads = {p.uid: p.load() for p in pilots}
         caps = {p.uid: max(1, p.scheduler.capacity) for p in pilots}
-        out: List[Union[Pilot, Exception]] = []
+        items: List[Tuple[TaskRecord, object]] = []
         for t in tasks:
             try:
-                p = min(self._compatible(t), key=lambda p: loads[p.uid])
+                items.append((t, self._compatible(t)))
             except RuntimeError as e:
-                out.append(e)
-                continue
-            loads[p.uid] += t.resources.slots / caps[p.uid]
-            out.append(p)
-        return out
+                items.append((t, e))
+        return self.policy.place_bulk(items, loads, caps)
 
     # --------------------------- work stealing -------------------------- #
     def add_migrate_hook(self, cb: Callable):
@@ -276,7 +286,7 @@ class PilotPool:
                 cands = self._compatible(task)
                 fitting = [p for p in cands
                            if task.resources.slots <= p.scheduler.capacity]
-                dst = min(fitting or cands, key=lambda p: p.load())
+                dst = self.policy.place(task, fitting or cands)
                 self._migrate(task, src, dst, cb, reason, _depth)
                 return
             except RuntimeError as e:
@@ -289,10 +299,15 @@ class PilotPool:
 
     def request_work(self, thief: Pilot, free_slots: Optional[int] = None
                      ) -> int:
-        """Steal queued-but-not-dispatched tasks from the most-loaded
-        compatible sibling into ``thief``.  Returns slots' worth of work
-        moved.  Called from agents' idle hooks (outside any agent lock)
-        and from the PoolScaler."""
+        """Steal queued-but-not-dispatched tasks from policy-ordered
+        victims into ``thief`` (most-loaded first under the default
+        policy).  Each candidate task additionally passes the policy's
+        per-task ``steal_eligible`` gate — a LocalityAware policy only
+        migrates a data-affine task when the victim's backlog-per-slot
+        (the imbalance) beats the affinity penalty, while the hard
+        ``sticky`` stamp is enforced by Agent.steal itself.  Returns
+        slots' worth of work moved.  Called from agents' idle hooks
+        (outside any agent lock) and from the PoolScaler."""
         if self._closed or thief.draining:
             return 0
         free = (free_slots if free_slots is not None
@@ -306,14 +321,18 @@ class PilotPool:
         # per loop iteration
         demand = {p.uid: p.agent.queued_demand() for p in cands}
         moved = 0
-        for victim in sorted(cands, key=lambda p: demand[p.uid],
-                             reverse=True):
-            if moved >= free or demand[victim.uid] == 0:
+        for victim in self.policy.pick_victim(thief, cands, demand):
+            if moved >= free:
                 break
+            if demand.get(victim.uid, 0) == 0:
+                continue    # policy orders victims; don't assume sorted
+            imbalance = (demand[victim.uid]
+                         / max(1, victim.scheduler.capacity))
             batch = victim.agent.steal(
-                pred=lambda t, _th=thief: (
+                pred=lambda t, _th=thief, _v=victim, _imb=imbalance: (
                     _th.accepts(t)
-                    and t.resources.slots <= _th.scheduler.capacity),
+                    and t.resources.slots <= _th.scheduler.capacity
+                    and self.policy.steal_eligible(t, _th, _v, _imb)),
                 max_slots=free - moved)
             for task, cb in batch:
                 if self._migrate(task, victim, thief, cb, reason="steal"):
@@ -385,10 +404,14 @@ class PilotPool:
 
 @dataclass
 class ScalerConfig:
-    """PoolScaler knobs (see docs/elasticity.md).
+    """PoolScaler knobs (see docs/elasticity.md, docs/placement.md).
 
     template          — PilotDescription cloned for every spawned pilot
                         (journal paths get a per-spawn suffix)
+    templates         — multi-template scaling: the candidate descriptions
+                        a scale-up chooses among; the pool's placement
+                        policy picks the one whose ``kinds`` cover the
+                        most starving queued demand (None = [template])
     min_pilots        — never retire below this many pilots
     max_pilots        — never spawn beyond this many pilots
     scale_up_wait_s   — spawn when the oldest queued task has waited this
@@ -404,6 +427,7 @@ class ScalerConfig:
                         (user-configured pilots are never drained)
     """
     template: PilotDescription = field(default_factory=PilotDescription)
+    templates: Optional[List[PilotDescription]] = None
     min_pilots: int = 1
     max_pilots: int = 4
     scale_up_wait_s: float = 0.25
@@ -473,16 +497,25 @@ class PoolScaler:
         pilots = self.pool.active()
 
         # scale up: the oldest queued task has waited past the threshold
-        # even after rebalancing, so no existing pilot can absorb it soon
+        # even after rebalancing, so no existing pilot can absorb it soon.
+        # Which template spawns is a placement decision: the policy picks
+        # the one whose kinds cover the most starving queued demand.
         wait = max((p.agent.oldest_queued_wait(now) for p in pilots),
                    default=0.0)
         if (wait > self.cfg.scale_up_wait_s
                 and len(pilots) < self.cfg.max_pilots
                 and now - self._last_spawn >= self.cfg.spawn_cooldown_s):
-            p = self.pool.add_pilot(self._spawn_desc())
+            starving = [kd for p in pilots
+                        for kd in p.agent.queued_task_kinds()]
+            template = self.pool.policy.pick_template(
+                starving, self.cfg.templates or [self.cfg.template])
+            p = self.pool.add_pilot(self._spawn_desc(template))
             self._spawned.add(p.uid)
             self._last_spawn = now
             self.decisions.append({"action": "scale_up", "pilot": p.uid,
+                                   "template": template.name,
+                                   "kinds": list(template.kinds or ())
+                                   or None,
                                    "queue_wait_s": wait, "t": now})
             self.pool.request_work(p, p.scheduler.n_free)
 
@@ -503,8 +536,9 @@ class PoolScaler:
                     self.decisions.append({"action": "retire",
                                            "pilot": p.uid, "t": now})
 
-    def _spawn_desc(self) -> PilotDescription:
-        d = self.cfg.template
+    def _spawn_desc(self, template: Optional[PilotDescription] = None
+                    ) -> PilotDescription:
+        d = template if template is not None else self.cfg.template
         n = len(self._spawned)
         return dataclasses.replace(
             d,
@@ -522,8 +556,10 @@ class PilotManager:
         return p
 
     def submit_pilots(self, descs: Sequence[PilotDescription],
-                      steal: bool = True) -> PilotPool:
-        pool = PilotPool(descs=descs, steal=steal)
+                      steal: bool = True,
+                      policy: Union[None, str, PlacementPolicy] = None
+                      ) -> PilotPool:
+        pool = PilotPool(descs=descs, steal=steal, policy=policy)
         for p in pool.pilots:
             self.pilots[p.uid] = p
         return pool

@@ -1,0 +1,245 @@
+"""Placement — the pluggable policy layer for *where* tasks land.
+
+The paper's §IV integration hinges on placement: the translator attaches
+resource requirements and RP late-binds tasks to pilots.  Through PR 3
+that policy was smeared across four layers — the translator stamped
+``res_kind``/``sticky``, ``PilotPool.route``/``route_bulk`` hardcoded
+least-loaded, ``request_work`` hardcoded most-loaded-victim stealing, and
+the ``PoolScaler`` could only clone one template.  This module extracts
+all four decisions behind one protocol so policy and mechanism separate
+(the split arXiv:2509.20819 motivates for hybrid AI-HPC workloads):
+
+  ``place(task, pilots)``       — pick the pilot for one task
+  ``place_bulk(...)``           — greedy batch placement with running loads
+  ``pick_victim(thief, ...)``   — order steal victims for a hungry pilot
+  ``steal_eligible(task, ...)`` — per-task migration gate inside a steal
+  ``pick_template(...)``        — choose the scale-up template for the
+                                  kinds that are actually starving
+
+Two built-in policies:
+
+  * ``LeastLoaded`` — PR-2 behavior, byte-for-byte: min demanded-slots /
+    capacity, first-of-equals, most-loaded victim, steal anything
+    compatible, clone the (single) template.  The default.
+  * ``LocalityAware`` — data-affinity placement: every task may carry an
+    ``affinity`` tuple of pilot uids/names (stamped by the translator
+    from the pilots that produced its inputs, plus any ``ResourceSpec``
+    hints).  Placement scores ``load - locality_weight * match`` so a
+    consumer follows its producers' data unless the load gap exceeds the
+    locality weight; stealing only migrates an affine task when the
+    victim's backlog (imbalance) beats the affinity penalty — the soft
+    sibling of the hard ``sticky`` stamp, which still pins absolutely.
+
+Tie-breaking composes: any policy takes a sequence of ``tie_break``
+callables ``(task, pilot) -> float`` (lower preferred) applied in order
+after the primary score — e.g. ``prefer_specialized`` keeps kind-
+restricted pilots busy so ``kinds=None`` generalists stay free, and
+``prefer_free_slots`` spreads onto warm capacity.  With no tie-breakers
+the enumeration order rules, matching the historical ``min()`` behavior.
+"""
+from __future__ import annotations
+
+from typing import (Callable, Dict, List, Optional, Sequence, Tuple, Union,
+                    TYPE_CHECKING)
+
+if TYPE_CHECKING:                       # import cycle: pilot.py imports us
+    from .futures import TaskRecord
+    from .pilot import Pilot, PilotDescription
+
+TieBreak = Callable[["TaskRecord", "Pilot"], float]
+
+# starving-queue demand: one entry per queued task — (the identifiers the
+# task routes under, its slot demand).  See Agent.queued_task_kinds().
+KindDemand = Sequence[Tuple[Tuple[str, ...], int]]
+
+
+# ------------------------- composable tie-breakers ------------------------ #
+
+def prefer_specialized(task, pilot) -> float:
+    """Prefer pilots whose description restricts kinds (and the narrower
+    the restriction the better) — keeps ``kinds=None`` generalists free
+    for tasks nothing else accepts."""
+    kinds = pilot.desc.kinds
+    return float(len(kinds)) if kinds is not None else float("inf")
+
+
+def prefer_free_slots(task, pilot) -> float:
+    """Prefer the pilot with more immediately-free slots."""
+    return -float(pilot.scheduler.n_free)
+
+
+class PlacementPolicy:
+    """The placement protocol *and* its default implementation: least
+    loaded (demanded slots / capacity), first-of-equals — exactly the
+    routing PR 2 hardcoded in ``PilotPool``.  Subclass and override
+    ``score`` / ``steal_eligible`` / ``pick_victim`` / ``pick_template``
+    to change policy without touching mechanism."""
+
+    name = "least-loaded"
+
+    def __init__(self, tie_breaks: Sequence[TieBreak] = ()):
+        self.tie_breaks = tuple(tie_breaks)
+
+    # ------------------------------ scoring --------------------------- #
+    def score(self, task: "TaskRecord", pilot: "Pilot",
+              load: float) -> float:
+        """Primary placement score; lower wins.  ``load`` is the demand
+        estimate (running batch estimate during ``place_bulk``)."""
+        return load
+
+    def _key(self, task, pilot, load) -> tuple:
+        return (self.score(task, pilot, load),
+                *(tb(task, pilot) for tb in self.tie_breaks))
+
+    # ------------------------------ placing --------------------------- #
+    def place(self, task: "TaskRecord", pilots: Sequence["Pilot"],
+              loads: Optional[Dict[str, float]] = None) -> "Pilot":
+        """Pick one pilot among the (compatible, non-empty) candidates.
+        ``loads`` optionally overrides live loads with a running batch
+        estimate; first-of-equals on full ties keeps routing stable."""
+        best = None
+        best_key = None
+        for p in pilots:
+            load = loads[p.uid] if loads is not None else p.load()
+            key = self._key(task, p, load)
+            if best is None or key < best_key:
+                best, best_key = p, key
+        return best
+
+    def place_bulk(self, items: Sequence[Tuple["TaskRecord", object]],
+                   loads: Dict[str, float], caps: Dict[str, int]
+                   ) -> List[Union["Pilot", Exception]]:
+        """Greedy batch placement: each item is (task, candidates) where
+        candidates is a pilot list or the routing Exception to pass
+        through; ``loads`` accumulates the demand placed earlier in this
+        batch so a bulk submission spreads instead of piling onto
+        whichever pilot was idle when the batch arrived."""
+        out: List[Union["Pilot", Exception]] = []
+        for task, cands in items:
+            if isinstance(cands, Exception):
+                out.append(cands)
+                continue
+            p = self.place(task, cands, loads=loads)
+            loads[p.uid] += task.resources.slots / caps[p.uid]
+            out.append(p)
+        return out
+
+    # ------------------------------ stealing -------------------------- #
+    def pick_victim(self, thief: "Pilot", pilots: Sequence["Pilot"],
+                    demand: Dict[str, int]) -> List["Pilot"]:
+        """Order candidate victims for a hungry thief, most attractive
+        first; default: most queued backlog first (PR-2 behavior)."""
+        return sorted(pilots, key=lambda p: demand.get(p.uid, 0),
+                      reverse=True)
+
+    def steal_eligible(self, task: "TaskRecord", thief: "Pilot",
+                       victim: "Pilot", imbalance: float) -> bool:
+        """Per-task migration gate evaluated inside the victim's steal
+        sweep (compatibility, capacity fit, and the hard ``sticky`` pin
+        are checked by the mechanism).  ``imbalance`` is the victim's
+        queued backlog in load units (queued slots / capacity).  Default:
+        any compatible task moves."""
+        return True
+
+    # ------------------------------ scaling --------------------------- #
+    def pick_template(self, starving_kinds: KindDemand,
+                      templates: Sequence["PilotDescription"]
+                      ) -> "PilotDescription":
+        """Choose which template the PoolScaler spawns: the one whose
+        ``kinds`` cover the most starving slot-demand, preferring the
+        most specialized on ties (then listing order).  With one template
+        — or an empty starving queue — this is the PR-2 clone."""
+        templates = list(templates)
+        if len(templates) == 1 or not starving_kinds:
+            return templates[0]
+
+        def covered(desc) -> int:
+            if desc.kinds is None:
+                return sum(slots for _, slots in starving_kinds)
+            return sum(slots for kinds, slots in starving_kinds
+                       if any(k in desc.kinds for k in kinds))
+
+        best, best_key = templates[0], None
+        for i, d in enumerate(templates):
+            nk = len(d.kinds) if d.kinds is not None else float("inf")
+            key = (-covered(d), nk, i)
+            if best_key is None or key < best_key:
+                best, best_key = d, key
+        return best
+
+    def __repr__(self):
+        return f"<{type(self).__name__} {self.name!r}>"
+
+
+class LeastLoaded(PlacementPolicy):
+    """PR-2 routing, named: an explicit alias so configuration reads
+    ``placement=LeastLoaded()`` (or ``placement=\"least-loaded\"``)."""
+
+
+def affinity_match(task: "TaskRecord", pilot: "Pilot") -> float:
+    """Fraction of the task's affinity hints this pilot satisfies (by
+    pilot uid or description name); 0.0 for tasks with no affinity."""
+    aff = getattr(task, "affinity", ()) or ()
+    if not aff:
+        return 0.0
+    name = pilot.desc.name
+    hits = sum(1 for a in aff if a == pilot.uid or (name and a == name))
+    return hits / len(aff)
+
+
+class LocalityAware(PlacementPolicy):
+    """Data-affinity placement: score ``load - locality_weight * match``.
+
+    ``locality_weight`` is denominated in load units (demanded slots per
+    slot of capacity): a fully-affine pilot wins until its load exceeds a
+    non-affine alternative's by the weight — ``0.0`` degenerates to
+    ``LeastLoaded``, a large weight pins consumers to their producers'
+    pilots no matter the queue.  Stealing applies the same currency: an
+    affine task migrates only when the victim's backlog-per-slot beats
+    the affinity penalty the move would pay, so a hungry sibling still
+    absorbs a genuinely starving queue but never shuffles data-local
+    work for marginal balance."""
+
+    name = "locality"
+
+    def __init__(self, locality_weight: float = 0.5,
+                 tie_breaks: Sequence[TieBreak] = ()):
+        super().__init__(tie_breaks=tie_breaks)
+        if locality_weight < 0:
+            raise ValueError(
+                f"locality_weight must be >= 0, got {locality_weight}")
+        self.locality_weight = locality_weight
+
+    def score(self, task, pilot, load):
+        return load - self.locality_weight * affinity_match(task, pilot)
+
+    def steal_eligible(self, task, thief, victim, imbalance):
+        penalty = self.locality_weight * (affinity_match(task, victim)
+                                          - affinity_match(task, thief))
+        return penalty <= 0 or imbalance > penalty
+
+
+_POLICIES = {
+    "least-loaded": LeastLoaded,
+    "least_loaded": LeastLoaded,
+    "leastloaded": LeastLoaded,
+    "locality": LocalityAware,
+    "locality-aware": LocalityAware,
+    "locality_aware": LocalityAware,
+}
+
+
+def resolve_policy(policy: Union[None, str, PlacementPolicy]
+                   ) -> PlacementPolicy:
+    """None -> LeastLoaded(); a name -> its policy with defaults; an
+    instance passes through (the RPEXExecutor/PilotPool kwarg surface)."""
+    if policy is None:
+        return LeastLoaded()
+    if isinstance(policy, PlacementPolicy):
+        return policy
+    cls = _POLICIES.get(str(policy).lower())
+    if cls is None:
+        raise ValueError(
+            f"unknown placement policy {policy!r}; "
+            f"known: {sorted(set(_POLICIES))} or a PlacementPolicy instance")
+    return cls()

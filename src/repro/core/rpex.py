@@ -9,9 +9,18 @@ Parsl's DFK emits tasks) and the bulk mode the paper names as future work.
 One RPEXExecutor may own *several* pilots (a PilotPool) with heterogeneous
 descriptions — e.g. a CPU pilot for pure-Python pre/post-processing and a
 device pilot for SPMD tasks.  The translator stamps each task's resource
-kind and the TaskManager late-binds it to the least-loaded compatible
-pilot, so one executor serves heterogeneous tasks on heterogeneous
-resources (the paper's central claim).
+kind and the TaskManager late-binds it to a compatible pilot chosen by a
+pluggable ``PlacementPolicy`` (least-loaded by default), so one executor
+serves heterogeneous tasks on heterogeneous resources (the paper's
+central claim).
+
+Placement is configured with the ``placement=`` kwarg: a policy name
+(``"least-loaded"`` — the default — or ``"locality"``) or any
+``repro.core.placement.PlacementPolicy`` instance, e.g.
+``RPEXExecutor(descs, placement=LocalityAware(locality_weight=0.75))``.
+The policy decides routing, bulk spreading, steal-victim ordering,
+per-task steal eligibility, and which scaler template spawns — see
+docs/placement.md.
 """
 from __future__ import annotations
 
@@ -22,6 +31,7 @@ from .executors import Executor, ParslTask
 from .futures import AppFuture, TaskState
 from .pilot import (Pilot, PilotDescription, PilotManager, PilotPool,
                     PoolScaler, ScalerConfig, TaskManager)
+from .placement import PlacementPolicy, resolve_policy
 from .store import union_intervals
 from .translator import bind_future, translate
 
@@ -36,9 +46,11 @@ class RPEXExecutor(Executor):
                  pilot: Optional[Pilot] = None,
                  pilots: Optional[Sequence[Pilot]] = None,
                  scaler: Optional[ScalerConfig] = None,
-                 steal: bool = True):
+                 steal: bool = True,
+                 placement: Union[None, str, PlacementPolicy] = None):
         # "Once initialized, RPEX ... starts a new RP session and creates
         # the Pilot Manager and the Task Manager."
+        policy = resolve_policy(placement)
         self._own_pilots = pilot is None and pilots is None
         if self._own_pilots:
             if pilot_desc is None:
@@ -48,12 +60,13 @@ class RPEXExecutor(Executor):
             else:
                 descs = list(pilot_desc)
             self.pmgr = PilotManager()
-            self.pool = self.pmgr.submit_pilots(descs, steal=steal)
+            self.pool = self.pmgr.submit_pilots(descs, steal=steal,
+                                                policy=policy)
         else:
             self.pmgr = None
             self.pool = PilotPool(
                 pilots=list(pilots) if pilots is not None else [pilot],
-                steal=steal)
+                steal=steal, policy=policy)
         self.tmgr = TaskManager(self.pool)
         self.scaler = (PoolScaler(self.pool, scaler).start()
                        if scaler is not None else None)
@@ -64,10 +77,17 @@ class RPEXExecutor(Executor):
         """Primary pilot (single-pilot compatibility accessor)."""
         return self.pool.pilots[0]
 
+    @property
+    def placement(self) -> PlacementPolicy:
+        """The active placement policy (docs-visible; see
+        docs/placement.md)."""
+        return self.pool.policy
+
     # ------------------------------------------------------------------ #
     def submit(self, ptask: ParslTask, future: AppFuture):
         task = translate(ptask.fn, ptask.args, ptask.kwargs,
-                         ptask.resources, ptask.retries)
+                         ptask.resources, ptask.retries,
+                         affinity=ptask.affinity)
         future.task = task
         self.tmgr.submit(task, done_cb=bind_future(task, future),
                          workflow_key=ptask.key)
@@ -78,7 +98,7 @@ class RPEXExecutor(Executor):
         cbs = {}
         for pt, fut in pairs:
             task = translate(pt.fn, pt.args, pt.kwargs, pt.resources,
-                             pt.retries)
+                             pt.retries, affinity=pt.affinity)
             fut.task = task
             if pt.key is not None:
                 keys[task.uid] = pt.key

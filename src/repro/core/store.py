@@ -31,7 +31,12 @@ Since PR 3 the store is an *off-critical-path* subsystem:
   * Long elastic runs compact the journal in place (snapshot + tail): when
     the file holds many times more lines than live task records, the
     writer thread atomically rewrites it as one snapshot line per task
-    plus a stats header, and appends from there.
+    plus a stats header — and a *bounded event tail*: the most recent
+    STATE events ride along (marked ``tail``, wall-stamped for epoch
+    re-anchoring) so recent per-task state timelines survive compaction.
+    Replay ingests tail events into the timeline only — their aggregate
+    contribution already lives in the stats header, so counters never
+    double-count.
   * Restart rebuilds the event stream: every journal line carries a
     monotonic timestamp (``mt``), so ``_replay`` reconstructs the STATE
     events (and replays journaled runtime events) instead of dropping
@@ -64,7 +69,8 @@ class StateStore:
     def __init__(self, journal_path: Optional[str] = None,
                  max_queue: int = 8192,
                  compact_min_lines: int = 4096,
-                 compact_factor: int = 4):
+                 compact_factor: int = 4,
+                 compact_tail_events: int = 256):
         self.journal_path = Path(journal_path) if journal_path else None
         self._lock = threading.Lock()
         self.tasks: Dict[str, dict] = {}
@@ -108,6 +114,7 @@ class StateStore:
         self._max_queue = max_queue
         self._compact_min_lines = compact_min_lines
         self._compact_factor = compact_factor
+        self._compact_tail_events = compact_tail_events
         self._journal_lines = 0
         if self.journal_path:
             self.journal_path.parent.mkdir(parents=True, exist_ok=True)
@@ -151,6 +158,16 @@ class StateStore:
                 if "event" in rec:              # journaled runtime event
                     shift = self._epoch_delta(rec.get("wt"), rec["t"],
                                               cur_off)
+                    if rec.pop("tail", None):
+                        # bounded event tail from a compaction snapshot:
+                        # restore the recent per-task state timeline, but
+                        # timeline ONLY — these events' occ/overhead
+                        # contribution is already in the stats header
+                        ev = {k: v for k, v in rec.items() if k != "wt"}
+                        ev["t"] += shift
+                        self.events.append(ev)
+                        self._ingest_timeline_only(ev)
+                        continue
                     if shift:
                         rec = {**rec, "t": rec["t"] + shift}
                     self.events.append(rec)
@@ -281,6 +298,17 @@ class StateStore:
                 and "result" in cur):
             return
         self._by_key[key] = rec
+
+    def _ingest_timeline_only(self, ev: dict):
+        """Fold a compaction-tail STATE event into the per-task timeline
+        (first occurrence wins) without touching the occ/overhead
+        aggregates — those already carry it via the snapshot stats."""
+        uid, state, t = ev["uid"], ev["state"], ev["t"]
+        n = max(self._slots_max.get(uid, 1), ev.get("slots", 1))
+        self._slots_max[uid] = n
+        ts = self._timeline.setdefault(uid, {})
+        if state not in ts:
+            ts[state] = t
 
     # ----------------------- incremental counters ----------------------- #
     def _ingest(self, ev: dict):
@@ -535,6 +563,17 @@ class StateStore:
             kept_events = [e for e in self.events
                            if e.get("event") not in (None, "STATE",
                                                      "ROUTED")]
+            # bounded event tail: the most recent STATE events ride along
+            # so recent per-task state timelines survive the compaction
+            # (replay ingests them timeline-only — their aggregate
+            # contribution is already inside the stats header below).
+            # Each gets a wall stamp so a post-reboot replay can re-anchor
+            # its monotonic time like any other journaled event.
+            mono_off = time.time() - time.monotonic()
+            state_evs = [e for e in self.events
+                         if e.get("event") == "STATE"]
+            tail = [dict(e, tail=True, wt=e["t"] + mono_off)
+                    for e in state_evs[-self._compact_tail_events:]]
             stats = {"occ": dict(self._occ),
                      "oh_total": (self._oh_seeded + self._oh_total
                                   + self._oh_cur),
@@ -544,22 +583,26 @@ class StateStore:
         with open(tmp, "w") as out:
             out.write(json.dumps({"event": "_SNAPSHOT",
                                   "t": time.monotonic(),
-                                  "mono_offset": (time.time()
-                                                  - time.monotonic()),
+                                  "mono_offset": mono_off,
                                   "stats": stats}) + "\n")
             for rec in snap:
                 out.write(self._dumps(rec)[0])
             for rec in kept_events:
+                out.write(self._dumps(rec)[0])
+            for rec in tail:
                 out.write(self._dumps(rec)[0])
             out.flush()
             os.fsync(out.fileno())
         self._fh.close()
         os.replace(tmp, self.journal_path)   # atomic: never a torn journal
         self._fh = open(self.journal_path, "a")
-        self._journal_lines = len(snap) + len(kept_events) + 1
+        self._journal_lines = len(snap) + len(kept_events) + len(tail) + 1
 
     def flush(self, timeout: float = 10.0) -> bool:
-        """Block until every queued journal record has been written."""
+        """Block until every queued journal record has been written.
+        False on timeout — and False after a writer I/O error killed the
+        journal: the queue was discarded then, so an empty queue is not
+        durability and True must never claim it."""
         if self._writer is None:
             return True
         deadline = time.monotonic() + timeout
@@ -570,7 +613,7 @@ class StateStore:
                 if left <= 0:
                     return False
                 self._wcv.wait(min(left, 0.05))
-        return True
+        return self.journal_error is None
 
     def close(self):
         """Drain the write-behind queue, then close the journal.  A task

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import shlex
 import subprocess
-from typing import Callable, Optional
+from typing import Callable, Optional, Sequence
 
 from .futures import AppFuture, ResourceSpec, TaskRecord, TaskState, new_uid
 
@@ -42,8 +42,16 @@ def _bash_runner(cmd_builder: Callable):
 
 def translate(fn: Callable, args: tuple, kwargs: dict,
               resources: Optional[ResourceSpec] = None,
-              max_retries: int = 0) -> TaskRecord:
-    """Capability (ii): 1:1 Parsl-task -> pilot-task translation."""
+              max_retries: int = 0,
+              affinity: Sequence[str] = ()) -> TaskRecord:
+    """Capability (ii): 1:1 Parsl-task -> pilot-task translation.
+
+    ``affinity`` carries runtime-discovered data-affinity hints (the DFK
+    dep manager passes the pilots that produced this task's inputs); they
+    merge — deduplicated, static ResourceSpec hints (input-array device /
+    pilot names) first — into the
+    ``TaskRecord.affinity`` stamp a LocalityAware placement policy scores.
+    """
     app_kind = kind = detect_kind(fn)   # classify once: translate() runs
     res = resources or getattr(fn, "__resources__", None) or ResourceSpec()
     body = fn                           # per task on the submit hot path
@@ -51,15 +59,18 @@ def translate(fn: Callable, args: tuple, kwargs: dict,
         body = _bash_runner(fn)
         kind = "python"  # executed as a single-slot callable wrapping a proc
         res = ResourceSpec(slots=res.slots, cpu_only=True,
-                           priority=res.priority, sticky=res.sticky)
+                           priority=res.priority, sticky=res.sticky,
+                           affinity=res.affinity)
     kwargs = dict(kwargs)
     if kind == "spmd" and not getattr(fn, "__spmd_jit__", True):
         kwargs["_jit"] = False
+    aff = tuple(res.affinity) + tuple(affinity)
     task = TaskRecord(
         uid=new_uid("task"), kind=kind, fn=body, args=args, kwargs=kwargs,
         resources=res, max_retries=max_retries,
         app_kind=app_kind,
         sticky=res.sticky,
+        affinity=tuple(dict.fromkeys(aff)) if aff else (),
         res_kind=res.res_kind or (
             "device" if kind == "spmd" and not res.cpu_only else "cpu"))
     task.transition(TaskState.NEW)

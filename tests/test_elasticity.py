@@ -18,10 +18,10 @@ import time
 
 import pytest
 
-from repro.core import (DataFlowKernel, Pilot, PilotDescription, PilotPool,
-                        PoolScaler, ResourceSpec, RPEXExecutor, ScalerConfig,
-                        TaskState, overhead_from_events, python_app,
-                        translate)
+from repro.core import (DataFlowKernel, LocalityAware, Pilot,
+                        PilotDescription, PilotPool, PoolScaler,
+                        ResourceSpec, RPEXExecutor, ScalerConfig, TaskState,
+                        overhead_from_events, python_app, translate)
 
 
 def _occupy(tmgr, pilot, n, gate):
@@ -181,6 +181,76 @@ def test_steal_racing_dispatch_runs_each_task_exactly_once():
         assert len(dones) == n and set(dones.values()) == {1}, \
             "a completion callback was lost or fired twice"
         assert all(t.state == TaskState.DONE for t in tasks)
+    finally:
+        pool.close()
+
+
+def test_affinity_steal_racing_dispatch_runs_each_task_exactly_once():
+    """Fault-injection for the affinity-aware steal gate: hammer
+    request_work() under a LocalityAware policy while the victim
+    dispatches a mixed affine/non-affine workload.  The gate flips
+    per-task between eligible and blocked as the victim's backlog
+    drains, racing the scheduler's allocation — every task must still
+    run exactly once and deliver its callback exactly once, wherever it
+    lands."""
+    pool = PilotPool([PilotDescription(n_slots=1, name="victim",
+                                       straggler_factor=1e9),
+                      PilotDescription(n_slots=1, name="thief",
+                                       straggler_factor=1e9)],
+                     policy=LocalityAware(locality_weight=0.5))
+    try:
+        victim, thief = pool.pilots
+        runs = {}
+        dones = {}
+        lock = threading.Lock()
+
+        def body(uid):
+            with lock:
+                runs[uid] = runs.get(uid, 0) + 1
+
+        n = 150
+        tasks = []
+        for i in range(n):
+            t = translate(body, (f"u{i}",), {})
+            if i % 3 == 0:
+                t.affinity = (victim.uid,)    # gate weighs these
+            elif i % 3 == 1:
+                t.affinity = (thief.uid,)     # always eligible
+            tasks.append(t)
+
+        def on_done(t):
+            with lock:
+                dones[t.uid] = dones.get(t.uid, 0) + 1
+
+        stop = threading.Event()
+
+        def hammer():
+            while not stop.is_set():
+                pool.request_work(thief)
+
+        hs = [threading.Thread(target=hammer) for _ in range(2)]
+        for h in hs:
+            h.start()
+        for t in tasks:
+            t.pilot_uid = victim.uid
+            victim.agent.submit(t, done_cb=on_done)
+        deadline = time.monotonic() + 30
+        while time.monotonic() < deadline:
+            if victim.agent.wait_idle(0.2) and thief.agent.wait_idle(0.2):
+                break
+        stop.set()
+        for h in hs:
+            h.join(timeout=5)
+
+        assert set(runs) == {f"u{i}" for i in range(n)}
+        assert set(runs.values()) == {1}, "a task ran twice or never"
+        assert len(dones) == n and set(dones.values()) == {1}, \
+            "a completion callback was lost or fired twice"
+        assert all(t.state == TaskState.DONE for t in tasks)
+        # the gate actually bit both ways: something migrated, and
+        # thief-affine work migrated at least as readily as victim-affine
+        stolen = [e for e in pool.events() if e["event"] == "STOLEN"]
+        assert stolen, "no steal ever passed the affinity gate"
     finally:
         pool.close()
 
@@ -390,6 +460,41 @@ def test_scaler_spawns_and_retires_pilots():
         assert rpex.pool.pilots[0].desc.name == "seed"
         # utilization spans the changed pilot set (seed + retired elastics)
         assert len(rpex.utilization()) >= 2
+        assert all(t.state == TaskState.DONE for t in tasks)
+    finally:
+        rpex.shutdown()
+
+
+def test_scaler_picks_template_matching_starving_kinds():
+    """Multi-template scaling: with a queue starving on one resource
+    kind, scale-up spawns the template whose ``kinds`` cover that demand
+    — not whichever template is listed first."""
+    cfg = ScalerConfig(
+        templates=[PilotDescription(n_slots=2, kinds=("python", "bash"),
+                                    name="cpu-t"),
+                   PilotDescription(n_slots=2, kinds=("gpu",),
+                                    name="gpu-t")],
+        min_pilots=1, max_pilots=2, scale_up_wait_s=0.1,
+        spawn_cooldown_s=0.1, scale_down_idle_s=60.0, interval_s=0.05)
+    # the seed accepts everything but has one slot: a burst of gpu-kind
+    # tasks backs up behind it and starves
+    rpex = RPEXExecutor(PilotDescription(n_slots=1, name="seed"),
+                        scaler=cfg)
+    try:
+        tasks = [translate(lambda: time.sleep(0.1), (), {},
+                           ResourceSpec(res_kind="gpu"))
+                 for _ in range(10)]
+        for t in tasks:
+            rpex.tmgr.submit(t)
+        assert rpex.tmgr.wait(timeout=30)
+        ups = [d for d in rpex.scaler.decisions
+               if d["action"] == "scale_up"]
+        assert ups, "scaler never spawned under a starving queue"
+        assert ups[0]["template"] == "gpu-t"
+        assert ups[0]["kinds"] == ["gpu"]
+        spawned = [p for p in rpex.pool.all_pilots()
+                   if p.desc.kinds == ("gpu",)]
+        assert spawned, "the gpu template pilot was never added"
         assert all(t.state == TaskState.DONE for t in tasks)
     finally:
         rpex.shutdown()

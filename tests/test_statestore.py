@@ -167,6 +167,9 @@ def test_writer_io_error_kills_journal_not_store(tmp_path):
         time.sleep(0.01)
     assert s.journal_error and "No space left" in s.journal_error
     assert s.completed_result("k63") == (True, 63)   # memory still live
+    # the dead journal discarded queued records: flush() must not claim
+    # durability for them
+    assert not s.flush(timeout=5)
     s.close()                                # still clean to close
     s2 = StateStore(str(j))                  # pre-failure records survive
     assert s2.completed_result("kpre") == (True, 0)
@@ -415,6 +418,66 @@ def test_compaction_preserves_runtime_events(tmp_path):
     kinds = [e["event"] for e in s2.events_snapshot()]
     assert "PILOT_START" in kinds and "STOLEN" in kinds
     assert "ROUTED" not in kinds             # compaction drops these
+    s2.close()
+
+
+def test_compaction_tail_preserves_recent_timelines(tmp_path):
+    """The bounded event tail: recent per-task state timelines survive a
+    compaction + restart (stamp-exact within the same boot), older ones
+    are the documented drop, and the tail never double-counts into the
+    aggregate utilization/overhead counters (the snapshot stats already
+    carry it)."""
+    j = tmp_path / "j.jsonl"
+    kw = dict(compact_min_lines=48, compact_factor=2,
+              compact_tail_events=64)
+    s = StateStore(str(j), **kw)
+    # distinct uid per round: early rounds age out of the tail window,
+    # late rounds stay inside it
+    for round_ in range(30):
+        for i in range(3):
+            drive(s, f"r{round_}_t{i}", key=f"r{round_}_k{i}",
+                  result=round_)
+        s.flush(timeout=10)
+    tl_before = s.timeline()
+    util_before = s.utilization(8)
+    oh_before = s.overhead()
+    s.close()
+
+    lines = [json.loads(l) for l in j.read_text().splitlines()]
+    assert any(r.get("tail") for r in lines), "no event tail written"
+
+    s2 = StateStore(str(j), **kw)
+    tl_after = s2.timeline()
+    # uids whose transitions exist ONLY as tail events (their task lines
+    # are snapshot summaries): the timeline must come from the tail
+    regular_uids = {r["uid"] for r in lines
+                    if "uid" in r and "event" not in r
+                    and not r.get("snap")}
+    tail_only = {r["uid"] for r in lines
+                 if r.get("tail")} - regular_uids
+    assert tail_only, "no uid exercises the tail-only replay path"
+    for uid in tail_only:
+        got = tl_after.get(uid)
+        assert got, f"tail-only uid lost its timeline: {uid}"
+        for st, t in got.items():
+            assert t == pytest.approx(tl_before[uid][st], abs=1e-9), uid
+    # the last rounds' tasks keep their full per-state timeline, with the
+    # exact stamps (same boot: no epoch shift)
+    recent = [u for u in tl_before if u.startswith("r29_")]
+    assert recent
+    for uid in recent:
+        assert tl_after.get(uid) == tl_before[uid], uid
+    # a bounded tail cannot hold everything: the earliest rounds' full
+    # timelines are gone (their latest state survives in the snapshot)
+    assert "r0_t0" not in tl_after
+    assert len(s2.tasks) == 90                 # ...but no record is lost
+    assert s2.completed_result("r0_k0") == (True, 0)
+    # and the aggregates match pre-restart: tail events were folded in as
+    # timeline-only, never double-ingested into the counters
+    for k in ("Scheduled", "Launching", "Running"):
+        assert s2.utilization(8)[k] == pytest.approx(util_before[k],
+                                                     rel=0.05, abs=1e-4)
+    assert s2.overhead() == pytest.approx(oh_before, rel=0.05, abs=1e-4)
     s2.close()
 
 
