@@ -1,0 +1,262 @@
+"""Experiment 7: checkpoint-based straggler recovery + preempt-and-migrate.
+
+Phase 1 (straggler recovery — replicas resume from checkpoints): a long
+stepwise task on a seeded pilot turns straggler mid-run (its per-step time
+jumps ~50x, the slow-node model).  The agent's p95 deadline fires a
+replica either way; the measurement is what the replica *does*:
+
+  * recompute-from-scratch (checkpointable=False, the pre-PR behavior):
+    the replica reruns every step from 0;
+  * checkpoint-resume: the replica restores the leader's latest saved
+    step and only runs the remainder.
+
+The gate is the ratio of straggler-task makespans (submit -> first
+finisher): resume must be >= --min-recovery-ratio (CI: 1.5) faster.
+
+Phase 2 (preempt-and-migrate vs queued-only stealing): a two-pilot pool
+with a long-task skew that queued-only stealing cannot fix — a long
+RUNNING checkpointable SPMD-kind task occupies the generalist pilot while
+*sticky* (hence unstealable) short tasks queue behind it; the device
+pilot idles.  With preemption enabled the idle pilot preempts the long
+task at its next checkpoint boundary and resumes it from the saved step
+(STOLEN reason="preempt"), freeing the generalist for its pinned backlog.
+Gate: makespan improvement >= --min-preempt-ratio, plus the migration
+evidence itself (a STOLEN-after-preempt event and a resumed step > 0).
+
+Emits ``BENCH_preempt.json`` at the repo root.
+"""
+from __future__ import annotations
+
+import argparse
+import itertools
+import json
+import threading
+import time
+from pathlib import Path
+
+from repro.core import (PilotDescription, PilotPool, PoolScaler,
+                        ResourceSpec, ScalerConfig, TaskState, translate)
+
+
+# --------------------------- phase 1: recovery --------------------------- #
+
+def _straggler_body(counter, lock, n, fast_s, slow_s, slow_after,
+                    ckpt=None):
+    """First invocation (the leader) turns slow at ``slow_after``;
+    replicas run at the healthy rate.  With a ckpt context each step is
+    checkpointed, so a replica resumes instead of recomputing."""
+    with lock:
+        me = next(counter)
+    start = 0
+    if ckpt is not None:
+        got = ckpt.restore()
+        if got is not None:
+            start = got[0] + 1
+    for step in range(start, n):
+        time.sleep(slow_s if (me == 0 and step >= slow_after) else fast_s)
+        if ckpt is not None:
+            ckpt.save(step, step)
+    return {"who": me, "start": start}
+
+
+def run_recovery(checkpointed: bool, n_steps: int, fast_ms: float,
+                 slow_s: float, slow_after: int, seed_ms: float) -> dict:
+    from repro.core import Pilot
+    pilot = Pilot(PilotDescription(n_slots=2, straggler_factor=3.0,
+                                   name="rec"))
+    try:
+        # seed the duration window: the siblings' durations set the p95
+        # deadline, sized so it fires about when the leader's healthy
+        # phase ends — i.e. with most of its steps already checkpointed
+        seeds = [translate(lambda: time.sleep(seed_ms / 1000.0), (), {})
+                 for _ in range(5)]
+        for s in seeds:
+            pilot.agent.submit(s)
+        assert pilot.agent.wait_idle(timeout=10)
+
+        lock = threading.Lock()
+        t = translate(
+            _straggler_body,
+            (itertools.count(), lock, n_steps, fast_ms / 1000.0, slow_s,
+             slow_after), {},
+            ResourceSpec(checkpointable=checkpointed))
+        res = []
+        t0 = time.monotonic()
+        pilot.agent.submit(t, done_cb=res.append)
+        deadline = time.monotonic() + 120
+        while not res and time.monotonic() < deadline:
+            time.sleep(0.005)
+        makespan = time.monotonic() - t0
+        assert res, "straggler task never completed"
+        done = res[0]
+        assert done.state == TaskState.DONE
+        return {"makespan_s": makespan,
+                "winner": "replica" if done.result["who"] > 0 else "leader",
+                "resumed_at": done.result["start"]}
+    finally:
+        pilot.close()
+
+
+# ----------------------- phase 2: preempt vs queued ----------------------- #
+
+def _resumable_body(n, step_s, ckpt=None):
+    start = 0
+    if ckpt is not None:
+        got = ckpt.restore()
+        if got is not None:
+            start = got[0] + 1
+    for step in range(start, n):
+        time.sleep(step_s)
+        if ckpt is not None:
+            ckpt.save(step, step)
+    return {"start": start}
+
+
+def run_skew(preempt: bool, long_steps: int, step_ms: float,
+             n_short: int, short_ms: float) -> dict:
+    """Generalist pilot p0 runs the long SPMD-kind task on both slots
+    with sticky python shorts queued behind it; device pilot p1 accepts
+    only the long task's kind.  Queued-only stealing moves nothing (the
+    backlog is sticky, the long task is RUNNING); preemption re-binds
+    the long task mid-flight."""
+    pool = PilotPool([PilotDescription(n_slots=2, name="gen",
+                                       straggler_factor=1e9),
+                      PilotDescription(n_slots=2, kinds=("spmd", "device"),
+                                       name="dev", straggler_factor=1e9)],
+                     preempt=preempt)
+    scaler = PoolScaler(pool, ScalerConfig(
+        min_pilots=2, max_pilots=2, interval_s=0.02,
+        scale_up_wait_s=1e9, scale_down_idle_s=1e9)).start()
+    try:
+        gen, dev = pool.pilots
+        lt = translate(_resumable_body, (long_steps, step_ms / 1000.0), {},
+                       ResourceSpec(slots=2, checkpointable=True,
+                                    res_kind="device"))
+        lt.pilot_uid = gen.uid
+        lres, sres = [], []
+        t0 = time.monotonic()
+        gen.agent.submit(lt, done_cb=lres.append)
+        for _ in range(n_short):
+            s = translate(lambda: time.sleep(short_ms / 1000.0), (), {},
+                          ResourceSpec(sticky=True))
+            s.pilot_uid = gen.uid
+            gen.agent.submit(s, done_cb=sres.append)
+        deadline = time.monotonic() + 120
+        while ((not lres or len(sres) < n_short)
+               and time.monotonic() < deadline):
+            time.sleep(0.005)
+        makespan = time.monotonic() - t0
+        assert lres and len(sres) == n_short, "skew workload timed out"
+        stolen = [e for e in pool.events() if e["event"] == "STOLEN"]
+        return {"makespan_s": makespan,
+                "long_final_pilot": ("dev" if lt.pilot_uid == dev.uid
+                                     else "gen"),
+                "resumed_at": lres[0].result["start"],
+                "stolen_preempt": sum(1 for e in stolen
+                                      if e.get("reason") == "preempt")}
+    finally:
+        scaler.stop()
+        pool.close()
+
+
+# --------------------------------- main ----------------------------------- #
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=12,
+                    help="straggler task steps (phase 1)")
+    ap.add_argument("--fast-ms", type=float, default=40.0)
+    ap.add_argument("--slow-s", type=float, default=2.0,
+                    help="leader per-step time once it straggles")
+    ap.add_argument("--slow-after", type=int, default=9,
+                    help="step index at which the leader turns slow")
+    ap.add_argument("--seed-ms", type=float, default=120.0,
+                    help="sibling-task duration seeding the p95 deadline "
+                         "(deadline = 3x p95; default fires as the "
+                         "leader's healthy phase ends)")
+    ap.add_argument("--long-steps", type=int, default=16,
+                    help="preempt-phase long-task steps")
+    ap.add_argument("--step-ms", type=float, default=60.0)
+    ap.add_argument("--shorts", type=int, default=8)
+    ap.add_argument("--short-ms", type=float, default=100.0)
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="repeat each measurement, keep the best per mode "
+                         "(container scheduling noise)")
+    ap.add_argument("--min-recovery-ratio", type=float, default=0.0,
+                    help="gate: checkpoint-resume speedup over "
+                         "recompute-from-scratch (0 = report only)")
+    ap.add_argument("--min-preempt-ratio", type=float, default=0.0,
+                    help="gate: preempt-and-migrate speedup over "
+                         "queued-only stealing (0 = report only)")
+    ap.add_argument("--out", default=str(Path(__file__).resolve().parent
+                                         .parent / "BENCH_preempt.json"))
+    args = ap.parse_args(argv)
+    reps = max(1, args.repeats)
+
+    print("# phase 1: straggler recovery — replica from checkpoint vs "
+          "recompute")
+    scratch = min((run_recovery(False, args.steps, args.fast_ms,
+                                args.slow_s, args.slow_after, args.seed_ms)
+                   for _ in range(reps)), key=lambda r: r["makespan_s"])
+    resume = min((run_recovery(True, args.steps, args.fast_ms,
+                               args.slow_s, args.slow_after, args.seed_ms)
+                  for _ in range(reps)), key=lambda r: r["makespan_s"])
+    recovery_ratio = scratch["makespan_s"] / resume["makespan_s"]
+    print(f"  recompute-from-scratch: {scratch['makespan_s']:.3f}s "
+          f"(winner={scratch['winner']}, start={scratch['resumed_at']})")
+    print(f"  checkpoint-resume     : {resume['makespan_s']:.3f}s "
+          f"(winner={resume['winner']}, start={resume['resumed_at']})")
+    print(f"  recovery speedup: {recovery_ratio:.2f}x")
+
+    print("# phase 2: long-task skew — preempt-and-migrate vs queued-only "
+          "stealing")
+    queued = min((run_skew(False, args.long_steps, args.step_ms,
+                           args.shorts, args.short_ms)
+                  for _ in range(reps)), key=lambda r: r["makespan_s"])
+    pre = min((run_skew(True, args.long_steps, args.step_ms,
+                        args.shorts, args.short_ms)
+               for _ in range(reps)), key=lambda r: r["makespan_s"])
+    preempt_ratio = queued["makespan_s"] / pre["makespan_s"]
+    print(f"  queued-only stealing : {queued['makespan_s']:.3f}s "
+          f"(long ran on {queued['long_final_pilot']})")
+    print(f"  preempt-and-migrate  : {pre['makespan_s']:.3f}s "
+          f"(long migrated to {pre['long_final_pilot']}, resumed at "
+          f"step {pre['resumed_at']}, "
+          f"preempt-steals={pre['stolen_preempt']})")
+    print(f"  makespan speedup: {preempt_ratio:.2f}x")
+
+    results = {
+        "config": dict(vars(args)),
+        "recovery": {"scratch": scratch, "resume": resume,
+                     "ratio": recovery_ratio},
+        "preempt": {"queued_only": queued, "preempt": pre,
+                    "ratio": preempt_ratio},
+    }
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(results, indent=2))
+    print(f"wrote {out}")
+
+    if resume["resumed_at"] <= 0:
+        raise SystemExit("REGRESSION: the replica did not resume from a "
+                         "checkpoint (resumed_at == 0)")
+    if pre["stolen_preempt"] < 1 or pre["long_final_pilot"] != "dev" \
+            or pre["resumed_at"] <= 0:
+        raise SystemExit(
+            "REGRESSION: no RUNNING task migrated pilots via preemption "
+            f"(stolen_preempt={pre['stolen_preempt']}, "
+            f"final={pre['long_final_pilot']}, "
+            f"resumed_at={pre['resumed_at']})")
+    if args.min_recovery_ratio and recovery_ratio < args.min_recovery_ratio:
+        raise SystemExit(
+            f"REGRESSION: checkpoint-recovery speedup {recovery_ratio:.2f}x "
+            f"< required {args.min_recovery_ratio:.2f}x")
+    if args.min_preempt_ratio and preempt_ratio < args.min_preempt_ratio:
+        raise SystemExit(
+            f"REGRESSION: preempt-and-migrate speedup {preempt_ratio:.2f}x "
+            f"< required {args.min_preempt_ratio:.2f}x")
+    return results
+
+
+if __name__ == "__main__":
+    main()

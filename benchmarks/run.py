@@ -48,6 +48,12 @@ _BENCH_HEADLINES = {
         (("hop_ratio",), "hop reduction", "{:.1f}x"),
         (("makespan_ratio",), "makespan ratio", "{:.2f}"),
     ],
+    "BENCH_preempt.json": [
+        (("recovery", "ratio"), "ckpt recovery", "{:.2f}x"),
+        (("recovery", "resume", "resumed_at"), "replica resumed@", "{:d}"),
+        (("preempt", "ratio"), "preempt vs queued", "{:.2f}x"),
+        (("preempt", "preempt", "stolen_preempt"), "preempt steals", "{:d}"),
+    ],
 }
 
 

@@ -8,6 +8,7 @@ Public API:
 """
 from .agent import Agent
 from .apps import bash_app, python_app, spmd_app
+from .checkpoint import Checkpoint, CheckpointStore, TaskPreempted
 from .dfk import DataFlowKernel, current_dfk
 from .executors import Executor, ParslTask, ThreadPoolExecutor
 from .futures import (AppFuture, ResourceSpec, TaskRecord, TaskState,
@@ -24,11 +25,13 @@ from .store import StateStore, overhead_from_events, union_intervals
 from .translator import bind_future, detect_kind, translate
 
 __all__ = [
-    "Agent", "AppFuture", "DataFlowKernel", "Executor", "LeastLoaded",
+    "Agent", "AppFuture", "Checkpoint", "CheckpointStore",
+    "DataFlowKernel", "Executor", "LeastLoaded",
     "LocalityAware", "ParslTask", "Pilot", "PilotDescription",
     "PilotManager", "PilotPool", "PlacementPolicy", "PoolScaler",
     "RPEXExecutor", "ResourceSpec", "SPMDFunctionExecutor", "ScalerConfig",
-    "SlotScheduler", "StateStore", "TaskManager", "TaskRecord", "TaskState",
+    "SlotScheduler", "StateStore", "TaskManager", "TaskPreempted",
+    "TaskRecord", "TaskState",
     "ThreadPoolExecutor", "affinity_match", "bash_app", "bind_future",
     "current_dfk", "detect_kind", "new_uid", "overhead_from_events",
     "prefer_free_slots", "prefer_specialized", "python_app",

@@ -15,7 +15,18 @@ Scheduling keeps the priority/FIFO wait heap with bounded backfill (later
 small tasks may run ahead of a blocked large task, never starving it).  A
 separate monitor thread implements straggler mitigation (soft-deadline
 replicas) and retry-on-failure; it waits on the stop event rather than
-sleeping, so shutdown is prompt.
+sleeping, so shutdown is prompt.  Replicas of *checkpointable* tasks
+share the leader's checkpoint key, so they resume from the leader's
+latest saved step instead of recomputing from step 0; a losing leader is
+asked to unwind at its next checkpoint boundary rather than grinding on.
+
+Cooperative preemption: ``preempt(uid, handoff)`` flags a RUNNING
+checkpointable task's Checkpoint context; its next ``ckpt.save`` persists
+the step then unwinds with ``TaskPreempted``, and the agent resets the
+task to TRANSLATED, moves its counters off this agent (exactly like a
+queued steal), and calls ``handoff(task, done_cb)`` outside all locks —
+the PilotPool's preempt-and-migrate and a draining pilot's partial-work
+handback are both built on this hook.
 
 Work stealing: ``steal()`` extracts queued-but-not-dispatched tasks under
 the same condition variable the scheduler loop holds for a whole pass, so
@@ -41,6 +52,7 @@ import time
 from collections import deque
 from typing import Callable, Dict, List, Optional, Tuple
 
+from .checkpoint import Checkpoint, CheckpointStore, TaskPreempted
 from .futures import TERMINAL, ResourceSpec, TaskRecord, TaskState, new_uid
 from .scheduler import SlotScheduler
 from .spmd_executor import SPMDFunctionExecutor
@@ -57,15 +69,19 @@ class Agent:
                  backfill_window: int = 16,
                  straggler_factor: float = 3.0,
                  straggler_min_samples: int = 5,
+                 straggler_min_deadline: float = 0.1,
                  monitor_interval: float = 0.02,
-                 poll_interval: Optional[float] = None):
+                 poll_interval: Optional[float] = None,
+                 ckpt_store: Optional[CheckpointStore] = None):
         self.scheduler = scheduler
         self.executor = executor
         self.store = store or StateStore()
+        self.ckpt = ckpt_store or CheckpointStore(self.store)
         self.max_workers = max_workers
         self.backfill_window = backfill_window
         self.straggler_factor = straggler_factor
         self.straggler_min_samples = straggler_min_samples
+        self.straggler_min_deadline = straggler_min_deadline
         # poll_interval is accepted for backward compatibility; the loop is
         # event-driven, so it only scales the straggler-monitor cadence.
         self.monitor_interval = (poll_interval * 10 if poll_interval
@@ -77,6 +93,12 @@ class Agent:
         self._running: Dict[str, TaskRecord] = {}
         self._replicas: Dict[str, str] = {}                  # replica -> orig
         self._done_cb: Dict[str, Callable] = {}
+        self._ckpt_ctxs: Dict[str, Checkpoint] = {}          # uid -> live ctx
+        self._preempt_handoff: Dict[str, Callable] = {}      # uid -> handoff
+        self._replicated: set = set()   # originals that already got their
+                                        # one replica this run attempt — a
+                                        # fast-failing replica must not
+                                        # trigger a respawn storm
         # recent durations only: the p95 straggler deadline needs the last
         # ~100 samples, not an unbounded re-sorted history
         self._durations: "deque[float]" = deque(maxlen=256)
@@ -337,6 +359,49 @@ class Agent:
                 self._cv.notify_all()            # a shutdown wait may park
         return taken
 
+    # ------------------------ cooperative preemption --------------------- #
+    def preemptable_tasks(self, include_sticky: bool = False
+                          ) -> List[TaskRecord]:
+        """RUNNING tasks eligible for cooperative preempt-and-migrate:
+        checkpointable (the saved step travels, so no work is lost), not
+        ``sticky`` (the hard pin applies to running tasks too — except
+        under ``include_sticky``, the drain path: a dying pilot cannot
+        honor stickiness), not a replica and not a replicated leader
+        (first-finisher-wins bookkeeping is pilot-local), and with no
+        preempt already pending."""
+        with self._cv:
+            leaders = set(self._replicas.values())
+            return [t for uid, t in self._running.items()
+                    if t.checkpointable
+                    and (include_sticky or not t.sticky)
+                    and t.replica_of is None and uid not in leaders
+                    and uid in self._ckpt_ctxs
+                    and uid not in self._preempt_handoff
+                    and t.state == TaskState.RUNNING]
+
+    def preempt(self, uid: str, handoff: Callable) -> bool:
+        """Request cooperative preemption of a RUNNING checkpointable
+        task.  Its next ``ckpt.save`` persists the step and unwinds with
+        ``TaskPreempted``; the agent then resets the task to TRANSLATED,
+        moves its outstanding/demand counters off this agent (exactly
+        like a queued steal), and calls ``handoff(task, done_cb)``
+        outside all locks.  If the task instead reaches a normal finish
+        first, the pending request is dropped and the handoff is called
+        once with ``(None, None)`` so the requester can release whatever
+        it reserved for the migration.  False when the task is not
+        running here, has no live Checkpoint context yet, or a preempt
+        is already pending — by construction a handed-off task always
+        has a saved checkpoint (the raise happens *after* the save)."""
+        with self._cv:
+            t = self._running.get(uid)
+            ctx = self._ckpt_ctxs.get(uid)
+            if (t is None or ctx is None or t.replica_of is not None
+                    or uid in self._preempt_handoff):
+                return False
+            self._preempt_handoff[uid] = handoff
+        ctx.request_preempt()
+        return True
+
     # --------------------------- scheduling ----------------------------- #
     def _on_capacity(self):
         """Scheduler listener: slots were released or grown — wake the loop."""
@@ -433,20 +498,41 @@ class Agent:
 
     def _run_task(self, task: TaskRecord):
         task.transition(TaskState.LAUNCHING, self.store)
+        ctx = None
+        if task.checkpointable:
+            ctx = Checkpoint(self.ckpt, task.ckpt_key or task.uid)
+            task.ckpt_ctx = ctx         # the executor injects it as the
+            with self._cv:              # body's ``ckpt`` kwarg
+                self._ckpt_ctxs[task.uid] = ctx
         try:
-            if task.kind == "spmd":
-                # materialize the sub-mesh + specialized callable now so
-                # LAUNCHING captures compile cost (the ibrun analog)...
-                mesh = self.executor.submesh(task.slot_ids,
-                                             task.resources.mesh_shape)
-            task.transition(TaskState.RUNNING, self.store)
-            t0 = time.monotonic()
-            result = self.executor.execute(task)
-            dt = time.monotonic() - t0
-            if task.error is not None:     # slot failed mid-flight
-                raise task.error
+            try:
+                if task.kind == "spmd":
+                    # materialize the sub-mesh + specialized callable now
+                    # so LAUNCHING captures compile cost (the ibrun
+                    # analog)...
+                    mesh = self.executor.submesh(task.slot_ids,
+                                                 task.resources.mesh_shape)
+                task.transition(TaskState.RUNNING, self.store)
+                t0 = time.monotonic()
+                result = self.executor.execute(task)
+                dt = time.monotonic() - t0
+                if task.error is not None:     # slot failed mid-flight
+                    raise task.error
+            finally:
+                # clear the context BEFORE any finish path can requeue or
+                # hand off the task: its next run installs a fresh
+                # context (possibly immediately, on another worker or
+                # agent), and this worker must never clobber it
+                if ctx is not None:
+                    if task.ckpt_ctx is ctx:
+                        task.ckpt_ctx = None
+                    with self._cv:
+                        if self._ckpt_ctxs.get(task.uid) is ctx:
+                            del self._ckpt_ctxs[task.uid]
             task.result = result
             self._finish(task, TaskState.DONE, dt)
+        except TaskPreempted:
+            self._preempt_finish(task)
         except BaseException as e:   # noqa: BLE001 — agent must survive
             task.error = e
             self._finish(task, TaskState.FAILED, None)
@@ -455,13 +541,55 @@ class Agent:
         self.scheduler.release(task.uid)      # fires _on_capacity listener
         with self._cv:
             self._running.pop(task.uid, None)
+            handoff = self._preempt_handoff.pop(task.uid, None)
             if duration is not None:
                 self._durations.append(duration)
             orig_uid = self._replicas.pop(task.uid, None)
+        if handoff is not None:
+            # a pending preempt was overtaken by a normal finish: notify
+            # the requester with (None, None) so it can release whatever
+            # it reserved for the migration (e.g. the pool's in-flight
+            # preempt budget for the thief)
+            handoff(None, None)
 
         if task.state == TaskState.CANCELED:
             # a replica already answered for this task and canceled it —
             # don't retry, don't overwrite CANCELED, don't re-fire callbacks
+            if task.checkpointable:
+                # GC any checkpoint this leader re-saved after the
+                # winning replica's discard
+                self.ckpt.discard(task.ckpt_key or task.uid)
+            self._settle(task)
+            return
+
+        # replica bookkeeping — checked BEFORE the retry path: a FAILED
+        # replica with retries remaining used to fall into the generic
+        # retry requeue *after* its _replicas mapping was popped, turning
+        # it into an ordinary task — first-finisher-wins bookkeeping was
+        # lost, a later success canceled nothing, and it kept running
+        # after the original completed.  Failed replicas are dropped,
+        # never retried (the original is still running and retries on its
+        # own terms).  First finisher wins, the loser is canceled; a
+        # failed replica must NOT consume the original's callback.
+        if orig_uid is not None:
+            if state == TaskState.DONE:
+                cb = self._done_cb.pop(orig_uid, None)
+                with self._cv:
+                    orig = self._running.get(orig_uid)
+                    octx = self._ckpt_ctxs.get(orig_uid)
+                task.transition(state, self.store)
+                if cb is not None:
+                    cb(task)
+                if orig is not None:
+                    orig.transition(TaskState.CANCELED, self.store)
+                    if octx is not None:
+                        # a checkpointing leader unwinds at its next save
+                        # instead of grinding a canceled task to the end
+                        octx.request_preempt()
+                if task.checkpointable:
+                    self.ckpt.discard(task.ckpt_key or orig_uid)
+            else:
+                task.transition(state, self.store)
             self._settle(task)
             return
 
@@ -469,8 +597,12 @@ class Agent:
             task.retries += 1
             task.error = None
             task.slot_ids = ()
+            # a checkpointable retry resumes from its last saved step —
+            # the checkpoint is only discarded on DONE
             task.transition(TaskState.TRANSLATED, self.store)
             with self._cv:                    # requeue keeps it outstanding
+                self._replicated.discard(task.uid)   # fresh attempt: may
+                                                     # straggle anew
                 heapq.heappush(self._wait,
                                (-task.resources.priority, self._seq, task))
                 self._seq += 1
@@ -479,33 +611,68 @@ class Agent:
                 self._cv.notify_all()
             return
 
-        # replica bookkeeping: first finisher wins, loser is canceled.  A
-        # failed replica must NOT consume the original's callback — the
-        # original is still running and will resolve its future itself.
-        if orig_uid is not None:
-            if state == TaskState.DONE:
-                cb = self._done_cb.pop(orig_uid, None)
-                with self._cv:
-                    orig = self._running.get(orig_uid)
-                task.transition(state, self.store)
-                if cb is not None:
-                    cb(task)
-                if orig is not None:
-                    orig.transition(TaskState.CANCELED, self.store)
-            else:
-                task.transition(state, self.store)
-            self._settle(task)
-            return
-
         task.transition(state, self.store)
+        if state == TaskState.DONE and task.checkpointable:
+            self.ckpt.discard(task.ckpt_key or task.uid)   # payload GC
         cb = self._done_cb.pop(task.uid, None)
         if cb is not None:
             cb(task)
         self._settle(task)
 
+    def _preempt_finish(self, task: TaskRecord):
+        """A checkpointable body unwound with TaskPreempted: the step it
+        just saved is durable, so the task is reset to TRANSLATED and
+        either handed off (preempt-and-migrate / drain) or requeued
+        locally.  Counters move with the task exactly as in steal()."""
+        self.scheduler.release(task.uid)
+        with self._cv:
+            self._running.pop(task.uid, None)
+            handoff = self._preempt_handoff.pop(task.uid, None)
+            orig_uid = self._replicas.pop(task.uid, None)
+
+        if task.state == TaskState.CANCELED or orig_uid is not None:
+            # a canceled leader unwound early via the preempt flag (its
+            # replica already answered and consumed the callback), or a
+            # stray replica: settle quietly, and GC the checkpoint the
+            # leader may have re-saved after the winner's discard
+            if task.state != TaskState.CANCELED:
+                task.transition(TaskState.CANCELED, self.store)
+            if task.checkpointable:
+                self.ckpt.discard(task.ckpt_key or task.uid)
+            self._settle(task)
+            return
+
+        cb = self._done_cb.pop(task.uid, None)
+        task.error = None
+        task.slot_ids = ()
+        task.transition(TaskState.TRANSLATED, self.store)
+        if handoff is not None:
+            # hand off BEFORE decrementing: a drain observing
+            # outstanding == 0 must already see this task in its orphan
+            # sweep, never lose it in the window between the two
+            handoff(task, cb)
+            with self._cv:
+                self._outstanding -= 1
+                self._demand_slots -= task.resources.slots
+                if self._outstanding == 0:
+                    self._cv.notify_all()
+            return
+        # no handoff registered (the requester raced a drain or vanished):
+        # requeue locally — the next pass or steal picks it up
+        with self._cv:
+            if cb is not None:
+                self._done_cb[task.uid] = cb
+            heapq.heappush(self._wait,
+                           (-task.resources.priority, self._seq, task))
+            self._seq += 1
+            self._queued_slots += task.resources.slots
+            self._dirty = True
+            self._cv.notify_all()
+
     def _settle(self, task: TaskRecord):
         """One submitted record reached a terminal state."""
         with self._cv:
+            self._replicated.discard(task.uid)
             self._outstanding -= 1
             self._demand_slots -= task.resources.slots
             if self._outstanding == 0:
@@ -516,9 +683,19 @@ class Agent:
         with self._cv:
             if len(self._durations) < self.straggler_min_samples:
                 return None
-            xs = sorted(self._durations)[-100:]
+            # slice the deque (most recent 100) BEFORE sorting: sorting
+            # first and then slicing took the 100 *largest* of up to 256
+            # samples — once the deque exceeded 100 entries the "p95"
+            # drifted toward the all-time max, inflating the straggler
+            # deadline until replicas effectively stopped firing
+            xs = sorted(list(self._durations)[-100:])
             p95 = xs[max(0, int(len(xs) * 0.95) - 1)]
-            return p95 * self.straggler_factor
+            # floor: now that the p95 tracks recent (possibly sub-ms)
+            # durations again, micro-task workloads would otherwise trip
+            # deadlines shorter than the monitor's own sampling cadence —
+            # a replica there costs more than the task it duplicates
+            return max(p95 * self.straggler_factor,
+                       self.straggler_min_deadline)
 
     def _monitor(self):
         # stop-event wait, not a sleep: exits promptly on shutdown and never
@@ -532,19 +709,51 @@ class Agent:
                 candidates = [
                     t for t in self._running.values()
                     if t.state == TaskState.RUNNING
-                    and t.uid not in self._replicas.values()
+                    and t.uid not in self._replicated
                     and t.replica_of is None
+                    and t.uid not in self._preempt_handoff
                     and now - t.timestamps.get("RUNNING", now) > dl
                     and self.scheduler.n_free >= t.resources.slots]
             for t in candidates:
-                rep = TaskRecord(
-                    uid=new_uid("replica"), kind=t.kind, fn=t.fn,
-                    args=t.args, kwargs=t.kwargs, resources=t.resources,
-                    replica_of=t.uid)
-                with self._cv:
-                    self._replicas[rep.uid] = t.uid
-                rep.transition(TaskState.TRANSLATED, self.store)
-                self.submit(rep)
+                self._spawn_replica(t)
+
+    def _spawn_replica(self, t: TaskRecord) -> TaskRecord:
+        """Submit a straggler replica of a RUNNING task.  The record
+        keeps every stamp the translator put on the original — sticky,
+        affinity, res/app kind, pilot binding — so the replica's journal
+        and placement records match the original's (they used to be
+        dropped, so replica records lost the translator's stamps).
+        Sharing ``ckpt_key`` is what makes replicas checkpoint-based:
+        the replica's ``ckpt.restore()`` picks up the leader's latest
+        saved step and resumes there instead of recomputing from 0.
+
+        One replica per original per run attempt (``_replicated``): a
+        replica that fails instantly must not trigger a respawn storm —
+        the deadline would re-trip on every monitor tick for as long as
+        the leader keeps running.  The marker clears if the original
+        itself fails and requeues (a fresh attempt may straggle anew)."""
+        rep = TaskRecord(
+            uid=new_uid("replica"), kind=t.kind, fn=t.fn,
+            args=t.args, kwargs=t.kwargs, resources=t.resources,
+            replica_of=t.uid, res_kind=t.res_kind, app_kind=t.app_kind,
+            pilot_uid=t.pilot_uid, sticky=t.sticky, affinity=t.affinity,
+            max_retries=t.max_retries,
+            checkpointable=t.checkpointable,
+            ckpt_key=t.ckpt_key or t.uid)
+        with self._cv:
+            self._replicas[rep.uid] = t.uid
+            self._replicated.add(t.uid)
+        rep.transition(TaskState.TRANSLATED, self.store)
+        if not self.submit(rep):
+            # the agent stopped accepting (drain/stop) between the
+            # deadline check and here: roll the bookkeeping back, or the
+            # stale _replicas entry would mark the leader as replicated
+            # forever — e.g. excluding it from the drain's own
+            # preempt-and-handback sweep
+            with self._cv:
+                self._replicas.pop(rep.uid, None)
+                self._replicated.discard(t.uid)
+        return rep
 
     # ------------------------------ stats ------------------------------- #
     def utilization_timeline(self):

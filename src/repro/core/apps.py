@@ -33,17 +33,23 @@ def _mk_app(fn: Callable, kind: str, resources: ResourceSpec,
 
 def python_app(fn=None, *, retries: int = 0, executor: Optional[str] = None,
                slots: int = 1, sticky: bool = False,
-               affinity: Sequence[str] = ()):
+               affinity: Sequence[str] = (), checkpointable: bool = False):
     """sticky=True pins every invocation to the pilot it was routed to:
     the task is never migrated by inter-pilot work stealing (use for tasks
     with pilot-local state or data affinity).  ``affinity`` is the soft
     sibling: pilot uids/names this app's input data lives on; a
     LocalityAware placement policy scores routing toward them (merged
-    with the producer pilots the dep manager discovers at run time)."""
+    with the producer pilots the dep manager discovers at run time).
+    checkpointable=True hands the body a ``ckpt`` keyword (Checkpoint
+    context: ``ckpt.restore()`` / ``ckpt.save(step, state)``) — partial
+    progress survives straggler replication, cooperative preemption, and
+    restarts (see docs/checkpointing.md)."""
     def deco(f):
-        return _mk_app(f, "python", ResourceSpec(slots=slots, cpu_only=True,
-                                                 sticky=sticky,
-                                                 affinity=tuple(affinity)),
+        return _mk_app(f, "python",
+                       ResourceSpec(slots=slots, cpu_only=True,
+                                    sticky=sticky,
+                                    affinity=tuple(affinity),
+                                    checkpointable=checkpointable),
                        retries, executor)
     return deco(fn) if fn is not None else deco
 
@@ -52,18 +58,22 @@ def spmd_app(fn=None, *, slots: int = 1,
              mesh: Optional[Tuple[int, int]] = None, retries: int = 0,
              executor: Optional[str] = None, priority: int = 0,
              jit: bool = True, sticky: bool = False,
-             affinity: Sequence[str] = ()):
+             affinity: Sequence[str] = (), checkpointable: bool = False):
     """jit=False for bodies that manage their own jit (e.g. a training
     segment calling a pre-jitted step) or that are not traceable.
     sticky=True exempts the task from inter-pilot work stealing;
     ``affinity`` names pilots holding this app's input arrays (soft
-    data-locality hint for LocalityAware placement)."""
+    data-locality hint for LocalityAware placement).  checkpointable=True
+    hands the body a ``ckpt`` Checkpoint context (see python_app); the
+    context is not traceable, so such bodies run un-jitted at the wrapper
+    level and manage their own jit per step."""
     def deco(f):
         f.__spmd_jit__ = jit
         return _mk_app(f, "spmd",
                        ResourceSpec(slots=slots, mesh_shape=mesh,
                                     priority=priority, sticky=sticky,
-                                    affinity=tuple(affinity)),
+                                    affinity=tuple(affinity),
+                                    checkpointable=checkpointable),
                        retries, executor)
     return deco(fn) if fn is not None else deco
 

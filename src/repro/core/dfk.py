@@ -118,6 +118,10 @@ class DataFlowKernel:
         self.tasks: Dict[str, TaskRecord] = {}   # DAG nodes
         self.edges: List[Tuple[str, str]] = []   # (producer, consumer)
         self.t_start = time.monotonic()
+        # restart observability: keys that were interrupted last run and
+        # carry a checkpoint — their tasks re-execute but resume from the
+        # recorded step (the value) instead of step 0
+        self.resumed_from_checkpoint: Dict[str, int] = {}
 
         # dependency manager: producer future -> consumers waiting on it.
         # Keyed by the future object (identity), not its uid: executors
@@ -207,6 +211,14 @@ class DataFlowKernel:
                 node.transition(TaskState.DONE)
                 future.set_result(result)
                 return future
+            # not completed, but checkpointed: the task re-executes below
+            # and its Checkpoint context restores the saved step — record
+            # the partial restart so callers can see what resumed
+            peek = getattr(ex, "checkpoint_step", None)
+            if peek is not None:
+                step = peek(key)
+                if step is not None:
+                    self.resumed_from_checkpoint[key] = step
 
         # dependency resolution: any AppFuture in args/kwargs — including
         # nested inside lists/tuples/dicts — is a dataflow edge

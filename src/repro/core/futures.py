@@ -60,6 +60,13 @@ class ResourceSpec:
                                     # holding this task's input arrays; a
                                     # LocalityAware policy scores placement
                                     # toward them (soft, unlike sticky)
+    checkpointable: bool = False    # the body accepts a ``ckpt`` keyword
+                                    # (Checkpoint context): it can resume
+                                    # from partial progress, making it
+                                    # eligible for checkpoint-based
+                                    # straggler replicas, cooperative
+                                    # preempt-and-migrate, and partial
+                                    # restarts
 
     def __post_init__(self):
         if self.slots < 1:
@@ -98,6 +105,16 @@ class TaskRecord:
     affinity: Tuple[str, ...] = ()  # data-affinity stamp (translator):
                                     # producer pilots + ResourceSpec hints;
                                     # scored by LocalityAware placement
+    checkpointable: bool = False    # translator stamp of the ResourceSpec
+                                    # flag: body takes a ``ckpt`` context
+    ckpt_key: Optional[str] = None  # checkpoint identity: the uid by
+                                    # default; replicas share the
+                                    # leader's; keyed workflows use the
+                                    # stable workflow key (restart)
+    ckpt_ctx: Optional[Any] = None  # live Checkpoint context while the
+                                    # task executes (runtime-only, never
+                                    # journaled; the executor injects it
+                                    # as the body's ``ckpt`` kwarg)
 
     def transition(self, state: TaskState, store=None):
         self.state = state

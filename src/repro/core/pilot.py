@@ -43,6 +43,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple, Union
 import jax
 
 from .agent import Agent
+from .checkpoint import CheckpointStore
 from .futures import ResourceSpec, TaskRecord, TaskState, new_uid
 from .placement import PlacementPolicy, resolve_policy
 from .scheduler import SlotScheduler
@@ -75,10 +76,12 @@ class Pilot:
         self.executor = SPMDFunctionExecutor(devices,
                                              cache=desc.cache_executables)
         self.store = StateStore(desc.journal)
+        self.ckpt = CheckpointStore(self.store)   # replays CHECKPOINT
         self.agent = Agent(self.scheduler, self.executor, self.store,
                            max_workers=desc.max_workers,
                            backfill_window=desc.backfill_window,
-                           straggler_factor=desc.straggler_factor).start()
+                           straggler_factor=desc.straggler_factor,
+                           ckpt_store=self.ckpt).start()
         self.t_start = time.monotonic()
         self.draining = False     # a draining pilot accepts no new work
         self._closed = False
@@ -119,10 +122,14 @@ class Pilot:
     # ----------------------------- retirement --------------------------- #
     def drain(self, timeout: float = 30.0
               ) -> List[Tuple[TaskRecord, Optional[Callable]]]:
-        """Stop accepting, hand back queued tasks, finish running tasks,
-        then close.  Returns the orphaned (task, done_cb) pairs for the
-        caller to re-route elsewhere.
+        """Stop accepting, hand back queued tasks, finish (or preempt)
+        running tasks, then close.  Returns the orphaned (task, done_cb)
+        pairs for the caller to re-route elsewhere.
 
+        RUNNING *checkpointable* tasks are cooperatively preempted: each
+        unwinds at its next checkpoint boundary and joins the orphans, so
+        a retiring pilot hands back partial work that resumes from its
+        saved step elsewhere instead of grinding long tasks to the end.
         Tasks that fail mid-drain (e.g. an injected slot failure) requeue
         into the wait heap with no capacity left to run them, so the wait
         loop keeps sweeping the heap into the orphan list until the agent
@@ -132,12 +139,42 @@ class Pilot:
         # drain is rejected (and re-placed by the pool) instead of landing
         # a task after the final sweep on an agent that will never run it
         self.agent.stop_accepting()
+        preempted: List[Tuple[TaskRecord, Optional[Callable]]] = []
+        plock = threading.Lock()
+        collecting = [True]
+
+        def _collect(task, cb):
+            if task is None:
+                return      # preempt request overtaken by a normal finish
+            with plock:
+                if collecting[0]:
+                    preempted.append((task, cb))
+                    return
+            # the drain timed out and already returned: nobody will ever
+            # read the orphan list, so fail the task visibly through its
+            # callback rather than letting its future hang forever
+            task.error = RuntimeError(
+                f"pilot {self.uid} retired while task {task.uid} was "
+                f"preempting")
+            task.transition(TaskState.FAILED, self.store)
+            if cb is not None:
+                cb(task)
+
         orphans = list(self.agent.steal())
+        # include_sticky: like the queued drain sweep, a dying pilot
+        # cannot honor stickiness
+        for t in self.agent.preemptable_tasks(include_sticky=True):
+            self.agent.preempt(t.uid, _collect)
         deadline = time.monotonic() + timeout
         while not self.agent.wait_idle(timeout=0.1):
             orphans += self.agent.steal()
+            for t in self.agent.preemptable_tasks(include_sticky=True):
+                self.agent.preempt(t.uid, _collect)   # late starters
             if time.monotonic() > deadline:
                 break
+        with plock:
+            collecting[0] = False
+            orphans += preempted
         drained = self.agent.wait_idle(timeout=0)
         self.agent.shutdown(wait=False)
         self.store.record_event("PILOT_RETIRE", pilot=self.uid,
@@ -170,6 +207,7 @@ class PilotPool:
                  descs: Optional[Sequence[PilotDescription]] = None,
                  pilots: Optional[Sequence[Pilot]] = None,
                  steal: bool = True,
+                 preempt: bool = True,
                  policy: Union[None, str, PlacementPolicy] = None):
         if pilots is None and descs is None:
             descs = [PilotDescription()]
@@ -179,6 +217,13 @@ class PilotPool:
             raise ValueError("PilotPool needs at least one pilot")
         self.retired: List[Pilot] = []
         self.steal_enabled = steal
+        # preempt-and-migrate rides on the steal machinery: when a
+        # queued-only pass finds nothing, a RUNNING checkpointable task
+        # may be cooperatively preempted and resumed on the thief
+        self.preempt_enabled = preempt
+        self._preempt_inflight: Dict[str, int] = {}   # thief uid -> slots
+                                                      # requested, not yet
+                                                      # arrived
         self.policy = resolve_policy(policy)
         self._lock = threading.RLock()
         self._migrate_hooks: List[Callable] = []
@@ -263,6 +308,14 @@ class PilotPool:
             hooks = list(self._migrate_hooks)
         for h in hooks:
             h(task, src, dst)
+        if task.checkpointable:
+            # the checkpoint travels with the task: the destination store
+            # adopts the newest snapshot (wherever a previous migration
+            # left it) so ``ckpt.restore()`` works there, and every other
+            # pilot drops its copy — a move, not a copy, so victim
+            # journals and payload dirs never accumulate checkpoints of
+            # tasks that long since migrated away
+            self.ensure_checkpoint(task, dst)
         if not dst.agent.submit(task, done_cb=cb):
             # dst began draining/closing between routing and submission —
             # the agent refused rather than heaping the task, so place it
@@ -337,7 +390,92 @@ class PilotPool:
             for task, cb in batch:
                 if self._migrate(task, victim, thief, cb, reason="steal"):
                     moved += task.resources.slots
+        if moved == 0 and self.preempt_enabled:
+            # queued-only pass found nothing movable: fall through to
+            # preempt-and-migrate — a RUNNING checkpointable task can be
+            # re-bound mid-flight, resuming from its saved step here
+            moved += self._request_preempt(thief, free)
         return moved
+
+    def _reserve_preempt(self, uid: str, n: int, free: int) -> bool:
+        """Atomically reserve ``n`` slots of ``uid``'s preempt budget;
+        False when concurrent requests already consumed it.  The check
+        and the increment share one lock section — a stale read here
+        would let an idle hook racing a scaler tick over-preempt past
+        the thief's free capacity."""
+        with self._lock:
+            cur = self._preempt_inflight.get(uid, 0)
+            if n > free - cur:
+                return False
+            self._preempt_inflight[uid] = cur + n
+        return True
+
+    def _release_preempt(self, uid: str, n: int):
+        with self._lock:
+            left = self._preempt_inflight.get(uid, 0) - n
+            if left > 0:
+                self._preempt_inflight[uid] = left
+            else:
+                self._preempt_inflight.pop(uid, None)
+
+    def _request_preempt(self, thief: Pilot, free: int) -> int:
+        """Pick one RUNNING checkpoint-eligible task (policy-chosen;
+        sticky/replica exclusion enforced by the victim's agent) and
+        request cooperative preemption: the task unwinds at its next
+        checkpoint boundary and the handoff migrates it to ``thief``,
+        where it resumes from the step it saved.  Returns the slots'
+        worth of work *requested* — arrival is asynchronous, so an
+        in-flight counter keeps repeated idle callbacks from preempting
+        more work than the thief can hold."""
+        with self._lock:
+            inflight = self._preempt_inflight.get(thief.uid, 0)
+            cands_p = [p for p in self.pilots
+                       if p is not thief and not p.draining]
+        budget = free - inflight
+        if budget <= 0:
+            return 0
+        cands: List[Tuple[TaskRecord, Pilot]] = []
+        loads: Dict[str, float] = {}
+        for victim in cands_p:
+            # preemption only pays when the victim has *queued* demand to
+            # flow into the freed slots (queued yet unstolen means it is
+            # pinned there: sticky, kind-incompatible, or affinity-gated).
+            # Without backlog, moving a running task is pure thrash — and
+            # two idle pilots would ping-pong it between them forever.
+            queued = victim.agent.queued_demand()
+            if queued <= 0:
+                continue
+            # the same imbalance currency steal_eligible is specified in:
+            # queued backlog per slot of capacity (total demand would
+            # count the candidate task itself and over-permit affine
+            # moves the queued-steal gate refuses)
+            loads[victim.uid] = queued / max(1, victim.scheduler.capacity)
+            for t in victim.agent.preemptable_tasks():
+                if (thief.accepts(t)
+                        and t.resources.slots <= budget
+                        and t.resources.slots <= thief.scheduler.capacity):
+                    cands.append((t, victim))
+        if not cands:
+            return 0
+        pick = self.policy.pick_preempt(thief, cands, loads)
+        if pick is None:
+            return 0
+        task, victim = pick
+        slots = task.resources.slots
+
+        def handoff(t, cb, _v=victim, _th=thief, _n=slots):
+            self._release_preempt(_th.uid, _n)
+            if t is None:
+                return      # request overtaken by a normal finish: the
+                            # budget above is released, nothing migrates
+            self._migrate(t, _v, _th, cb, reason="preempt")
+
+        if not self._reserve_preempt(thief.uid, slots, free):
+            return 0        # a concurrent request consumed the budget
+        if not victim.agent.preempt(task.uid, handoff):
+            self._release_preempt(thief.uid, slots)
+            return 0
+        return slots
 
     def rebalance(self) -> int:
         """Pull work to every hungry pilot (free slots, empty wait heap) —
@@ -376,6 +514,34 @@ class PilotPool:
         for task, cb in orphans:
             self._place_orphan(task, cb, pilot, reason="drain")
         return True
+
+    # ----------------------------- checkpoints --------------------------- #
+    def checkpoint_step(self, key: str) -> Optional[int]:
+        """Latest checkpointed step for ``key`` across every pilot's
+        CheckpointStore — including retired pilots, since a migrated
+        task's checkpoint lives wherever it last ran.  None when no
+        checkpoint is recorded anywhere (payloads are not touched)."""
+        steps = [s for p in self.all_pilots()
+                 for s in [p.ckpt.step(key)] if s is not None]
+        return max(steps) if steps else None
+
+    def ensure_checkpoint(self, task: TaskRecord, dst: Pilot):
+        """*Move* the newest checkpoint for the task to ``dst``: every
+        other pilot's copy is adopted (max step wins — ``adopt`` keeps
+        the newer side) and then discarded.  Used by migrations and by
+        the restart path (a journal-replayed checkpoint may live on a
+        different pilot than the one the task now routes to).  Move
+        semantics keep exactly one live copy pool-wide, so completion
+        GC on the final pilot retires the key everywhere and victim
+        journals never accumulate stale snapshots."""
+        if not task.checkpointable:
+            return
+        key = task.ckpt_key or task.uid
+        others = [p for p in self.all_pilots() if p is not dst]
+        for p in others:
+            dst.ckpt.adopt(key, p.ckpt)
+        for p in others:
+            p.ckpt.discard(key)
 
     # ------------------------------ queries ------------------------------ #
     def utilization(self) -> Dict[str, float]:
@@ -557,9 +723,11 @@ class PilotManager:
 
     def submit_pilots(self, descs: Sequence[PilotDescription],
                       steal: bool = True,
+                      preempt: bool = True,
                       policy: Union[None, str, PlacementPolicy] = None
                       ) -> PilotPool:
-        pool = PilotPool(descs=descs, steal=steal, policy=policy)
+        pool = PilotPool(descs=descs, steal=steal, preempt=preempt,
+                         policy=policy)
         for p in pool.pilots:
             self.pilots[p.uid] = p
         return pool
@@ -627,6 +795,15 @@ class TaskManager:
                                  kind=task.kind)
         if workflow_key is not None:
             self._wf_keys[task.uid] = workflow_key
+            if task.checkpointable:
+                # checkpoints of keyed tasks use the stable workflow key,
+                # so a restarted run's re-submission (fresh uid) resumes
+                # the interrupted task from its last saved step; the
+                # routed pilot adopts the newest snapshot wherever the
+                # last run left it
+                if task.ckpt_key in (None, task.uid):
+                    task.ckpt_key = workflow_key
+                self.pool.ensure_checkpoint(task, pilot)
             pilot.store.record(task, workflow_key=workflow_key)
         return pilot
 

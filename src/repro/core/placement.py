@@ -13,6 +13,9 @@ all four decisions behind one protocol so policy and mechanism separate
   ``place_bulk(...)``           — greedy batch placement with running loads
   ``pick_victim(thief, ...)``   — order steal victims for a hungry pilot
   ``steal_eligible(task, ...)`` — per-task migration gate inside a steal
+  ``pick_preempt(thief, ...)``  — choose the RUNNING checkpointable task
+                                  to preempt-and-migrate when the
+                                  queued-only steal pass found nothing
   ``pick_template(...)``        — choose the scale-up template for the
                                   kinds that are actually starving
 
@@ -141,6 +144,29 @@ class PlacementPolicy:
         any compatible task moves."""
         return True
 
+    # ----------------------------- preemption -------------------------- #
+    def pick_preempt(self, thief: "Pilot",
+                     candidates: Sequence[Tuple["TaskRecord", "Pilot"]],
+                     loads: Dict[str, float]
+                     ) -> Optional[Tuple["TaskRecord", "Pilot"]]:
+        """Choose one RUNNING task to preempt-and-migrate onto ``thief``
+        after a queued-only steal pass found nothing.  ``candidates`` are
+        (task, victim) pairs pre-gated by the mechanism (checkpointable,
+        non-sticky, non-replica, kind-compatible, capacity fit — the
+        Agent enforces the hard pins); ``loads`` maps each victim pilot
+        uid to its queued backlog per slot of capacity — the same
+        imbalance currency ``steal_eligible`` receives.  Default: take
+        from the most-loaded victim, longest-running task first (it has
+        the most checkpointed progress to carry over).  Return None to
+        decline preemption entirely."""
+        best, best_key = None, None
+        for t, victim in candidates:
+            key = (-loads.get(victim.uid, 0.0),
+                   t.timestamps.get("RUNNING", float("inf")))
+            if best is None or key < best_key:
+                best, best_key = (t, victim), key
+        return best
+
     # ------------------------------ scaling --------------------------- #
     def pick_template(self, starving_kinds: KindDemand,
                       templates: Sequence["PilotDescription"]
@@ -217,6 +243,16 @@ class LocalityAware(PlacementPolicy):
         penalty = self.locality_weight * (affinity_match(task, victim)
                                           - affinity_match(task, thief))
         return penalty <= 0 or imbalance > penalty
+
+    def pick_preempt(self, thief, candidates, loads):
+        """Affinity gates preemption in the same currency as stealing: a
+        RUNNING task affine to its victim pilot only migrates when the
+        victim's queued backlog per slot beats the affinity penalty of
+        the move."""
+        eligible = [(t, v) for t, v in candidates
+                    if self.steal_eligible(t, thief, v,
+                                           loads.get(v.uid, 0.0))]
+        return super().pick_preempt(thief, eligible, loads)
 
 
 _POLICIES = {

@@ -47,6 +47,7 @@ class RPEXExecutor(Executor):
                  pilots: Optional[Sequence[Pilot]] = None,
                  scaler: Optional[ScalerConfig] = None,
                  steal: bool = True,
+                 preempt: bool = True,
                  placement: Union[None, str, PlacementPolicy] = None):
         # "Once initialized, RPEX ... starts a new RP session and creates
         # the Pilot Manager and the Task Manager."
@@ -61,12 +62,13 @@ class RPEXExecutor(Executor):
                 descs = list(pilot_desc)
             self.pmgr = PilotManager()
             self.pool = self.pmgr.submit_pilots(descs, steal=steal,
+                                                preempt=preempt,
                                                 policy=policy)
         else:
             self.pmgr = None
             self.pool = PilotPool(
                 pilots=list(pilots) if pilots is not None else [pilot],
-                steal=steal, policy=policy)
+                steal=steal, preempt=preempt, policy=policy)
         self.tmgr = TaskManager(self.pool)
         self.scaler = (PoolScaler(self.pool, scaler).start()
                        if scaler is not None else None)
@@ -123,6 +125,13 @@ class RPEXExecutor(Executor):
             if found:
                 return True, result
         return False, None
+
+    def checkpoint_step(self, workflow_key: str):
+        """Latest checkpointed step recorded for this key across every
+        pilot (incl. retired), or None — the partial-restart analog of
+        ``completed_result``: a key that is not DONE but has a
+        checkpoint will re-execute and resume from this step."""
+        return self.pool.checkpoint_step(workflow_key)
 
     def utilization(self):
         """Per-pilot busy-slot fraction across the (possibly elastic)

@@ -95,6 +95,12 @@ class SPMDFunctionExecutor:
         agent worker thread (the MPI-Worker analog)."""
         kwargs = dict(task.kwargs)
         jit = kwargs.pop("_jit", True)
+        if task.ckpt_ctx is not None:
+            # checkpointable body: inject the live Checkpoint context.
+            # The context is not traceable, so the wrapper-level jit is
+            # skipped — step bodies manage their own jit.
+            kwargs["ckpt"] = task.ckpt_ctx
+            jit = False
         if task.kind == "spmd":
             mesh = self.submesh(task.slot_ids, task.resources.mesh_shape)
             call = self._specialize(task.fn, mesh, jit)

@@ -34,6 +34,8 @@ Since PR 3 the store is an *off-critical-path* subsystem:
     plus a stats header — and a *bounded event tail*: the most recent
     STATE events ride along (marked ``tail``, wall-stamped for epoch
     re-anchoring) so recent per-task state timelines survive compaction.
+    ``CHECKPOINT`` events (the task-checkpoint subsystem's save/gc
+    markers, see checkpoint.py) collapse to one line per live key.
     Replay ingests tail events into the timeline only — their aggregate
     contribution already lives in the stats header, so counters never
     double-count.
@@ -560,9 +562,28 @@ class StateStore:
             # and each task record carries its "pilot" binding anyway).
             self._wq.clear()
             snap = [dict(rec, snap=True) for rec in self.tasks.values()]
-            kept_events = [e for e in self.events
-                           if e.get("event") not in (None, "STATE",
-                                                     "ROUTED")]
+            kept_events = []
+            ckpt_latest: Dict[str, dict] = {}
+            for e in self.events:
+                kind = e.get("event")
+                if kind in (None, "STATE", "ROUTED"):
+                    continue
+                if kind == "CHECKPOINT":
+                    # collapse: a long task journals one CHECKPOINT per
+                    # saved step, but only the latest per key is live —
+                    # replay would ignore the rest anyway (monotonic
+                    # steps) and gc'd keys drop out entirely, so the
+                    # compacted journal carries one line per live key
+                    key = e.get("key")
+                    if e.get("gc"):
+                        ckpt_latest.pop(key, None)
+                    elif (key not in ckpt_latest
+                          or e.get("step", 0)
+                          >= ckpt_latest[key].get("step", 0)):
+                        ckpt_latest[key] = e
+                    continue
+                kept_events.append(e)
+            kept_events.extend(ckpt_latest.values())
             # bounded event tail: the most recent STATE events ride along
             # so recent per-task state timelines survive the compaction
             # (replay ingests them timeline-only — their aggregate

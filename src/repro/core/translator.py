@@ -60,17 +60,22 @@ def translate(fn: Callable, args: tuple, kwargs: dict,
         kind = "python"  # executed as a single-slot callable wrapping a proc
         res = ResourceSpec(slots=res.slots, cpu_only=True,
                            priority=res.priority, sticky=res.sticky,
-                           affinity=res.affinity)
+                           affinity=res.affinity,
+                           checkpointable=res.checkpointable)
     kwargs = dict(kwargs)
     if kind == "spmd" and not getattr(fn, "__spmd_jit__", True):
         kwargs["_jit"] = False
     aff = tuple(res.affinity) + tuple(affinity)
+    uid = new_uid("task")
     task = TaskRecord(
-        uid=new_uid("task"), kind=kind, fn=body, args=args, kwargs=kwargs,
+        uid=uid, kind=kind, fn=body, args=args, kwargs=kwargs,
         resources=res, max_retries=max_retries,
         app_kind=app_kind,
         sticky=res.sticky,
         affinity=tuple(dict.fromkeys(aff)) if aff else (),
+        checkpointable=res.checkpointable,
+        ckpt_key=uid,       # replicas inherit it; keyed workflows replace
+                            # it with the stable workflow key (restart)
         res_kind=res.res_kind or (
             "device" if kind == "spmd" and not res.cpu_only else "cpu"))
     task.transition(TaskState.NEW)

@@ -170,8 +170,12 @@ def main(argv=None):
             f.result()
     loader.close()
     rpex.shutdown()
-    print(f"[train] done: {step} steps, final loss {losses[-1]:.4f}, "
-          f"first loss {losses[0]:.4f}")
+    if losses:
+        print(f"[train] done: {step} steps, final loss {losses[-1]:.4f}, "
+              f"first loss {losses[0]:.4f}")
+    else:
+        # resumed past --steps: every segment was skipped via checkpoint
+        print(f"[train] done: already at step {step}, nothing to run")
     return losses
 
 
