@@ -9,7 +9,11 @@ stream latency, which is where polling hurts: each stream submission used
 to wait out a poll tick before it could even be scheduled.
 
 Emits ``BENCH_throughput.json`` with every measurement plus the headline
-``stream_speedup_vs_polling`` factor (acceptance gate: >= 5x).
+``stream_speedup_vs_polling`` factor (acceptance gate: >= 5x) and a
+``gil_bound`` diagnostic — bulk wall-time over total calibrated
+single-threaded CPU-burn work (~1.0 = fully GIL-serialized, ~1/cores =
+parallel) — so the thread/process crossover exp8 measures is visible in
+the cross-PR trajectory.
 """
 from __future__ import annotations
 
@@ -26,6 +30,28 @@ from repro.core import (PilotDescription, ResourceSpec, RPEXExecutor,
 
 def _noop(x):
     return x
+
+
+def _burn(iters):
+    """Fixed-work CPU burn (NOT wall-clock bounded: a time-based burn
+    under GIL contention does less work per task but the same wall time,
+    which would hide the contention this diagnostic exists to show)."""
+    x = 0
+    for i in range(iters):
+        x += i * i
+    return x
+
+
+def _calibrate_burn(target_s: float = 0.01) -> int:
+    """Iterations of _burn worth ~target_s of single-threaded work."""
+    iters = 50_000
+    while True:
+        t0 = time.perf_counter()
+        _burn(iters)
+        dt = time.perf_counter() - t0
+        if dt >= target_s / 4:
+            return max(1, int(iters * target_s / dt))
+        iters *= 2
 
 
 # ---------------------- pre-refactor polling baseline ---------------------- #
@@ -153,6 +179,32 @@ def bench_event_bulk(n_tasks: int, n_slots: int, n_pilots: int) -> float:
         rpex.shutdown()
 
 
+def bench_gil_bound(n_tasks: int, n_slots: int, burn_s: float):
+    """The thread/process crossover diagnostic: bulk wall-time over the
+    total *calibrated* single-threaded work (n_tasks x burn_s).  With k
+    truly parallel executors the ratio approaches 1/k; GIL-bound thread
+    workers hold it at ~1.0 regardless of slot count (the exp3 ceiling
+    ROADMAP's open item 3 and docs/processes.md discuss).  Calibrated
+    work is the right denominator: per-task RUNNING->DONE spans stretch
+    under GIL contention by exactly the factor being measured, so a
+    span-based ratio reads ~1/slots whether or not the GIL serialized
+    anything."""
+    iters = _calibrate_burn(burn_s)
+    rpex = _mk_rpex(1, n_slots)
+    try:
+        tasks = [translate(_burn, (iters,), {}, ResourceSpec(slots=1))
+                 for _ in range(n_tasks)]
+        t0 = time.monotonic()
+        rpex.tmgr.submit_bulk(tasks)
+        ok = rpex.tmgr.wait(timeout=120)
+        assert ok, "gil-bound probe timed out"
+        wall = time.monotonic() - t0
+        return {"wall_s": wall, "work_s": n_tasks * burn_s,
+                "gil_bound": wall / (n_tasks * burn_s)}
+    finally:
+        rpex.shutdown()
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--tasks", type=int, default=1000)
@@ -166,6 +218,10 @@ def main(argv=None):
                          "stream latency is ~3 thread handoffs, so single "
                          "runs swing 2x with container scheduling noise; "
                          "min-of-N estimates the floor for both runtimes")
+    ap.add_argument("--gil-tasks", type=int, default=32,
+                    help="CPU-burn tasks for the gil_bound diagnostic")
+    ap.add_argument("--gil-burn-s", type=float, default=0.01,
+                    help="single-threaded CPU work per gil_bound task")
     ap.add_argument("--min-speedup", type=float, default=0.0,
                     help="exit nonzero if stream speedup vs the polling "
                          "baseline falls below this (0 = report only); CI "
@@ -213,6 +269,13 @@ def main(argv=None):
     results["stream_speedup_vs_polling"] = speedup
     print(f"# stream per-task overhead: event-driven is {speedup:.1f}x "
           f"lower than poll_interval={args.poll_interval}")
+
+    gb = bench_gil_bound(args.gil_tasks, args.slots, args.gil_burn_s)
+    results["gil_bound"] = gb
+    print(f"# gil_bound diagnostic (inproc, CPU-burn bulk): "
+          f"{gb['gil_bound']:.2f} "
+          f"(1.0 = fully serialized; ~1/cores = parallel — see exp8 for "
+          f"the proc-transport crossover)")
 
     out = Path(args.out)
     out.parent.mkdir(parents=True, exist_ok=True)

@@ -7,10 +7,10 @@
   roofline -> §Roofline table from the dry-run artifacts (assignment)
 
 The gated runtime benchmarks (exp3 throughput, exp4 balance, exp5 state
-path, exp6 locality) each emit a canonical ``BENCH_*.json`` at the repo
-root so the perf trajectory is tracked across PRs; ``--bench-summary``
-aggregates whatever artifacts are present into one table without
-re-running anything.
+path, exp6 locality, exp7 preemption, exp8 proc pool) each emit a
+canonical ``BENCH_*.json`` at the repo root so the perf trajectory is
+tracked across PRs; ``--bench-summary`` aggregates whatever artifacts
+are present into one table without re-running anything.
 
 Prints ``name,us_per_call,derived`` CSV summary lines at the end.
 """
@@ -53,6 +53,12 @@ _BENCH_HEADLINES = {
         (("recovery", "resume", "resumed_at"), "replica resumed@", "{:d}"),
         (("preempt", "ratio"), "preempt vs queued", "{:.2f}x"),
         (("preempt", "preempt", "stolen_preempt"), "preempt steals", "{:d}"),
+    ],
+    "BENCH_procpool.json": [
+        (("proc_speedup_cpu",), "proc CPU speedup", "{:.2f}x"),
+        (("cpu_burn", "inproc", "gil_bound"), "inproc gil_bound", "{:.2f}"),
+        (("cpu_burn", "proc", "gil_bound"), "proc gil_bound", "{:.2f}"),
+        (("config", "cores"), "cores", "{:d}"),
     ],
 }
 

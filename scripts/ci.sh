@@ -17,11 +17,15 @@ fi
 
 # runtime micro-benchmark smoke (fast settings; the full runs are
 # `python benchmarks/exp3_throughput.py` / `exp5_statepath.py` /
-# `exp6_locality.py` / `exp7_preempt.py`)
+# `exp6_locality.py` / `exp7_preempt.py` / `exp8_procpool.py`)
 if [[ "${CI_BENCH:-0}" == "1" ]]; then
     python benchmarks/exp3_throughput.py --tasks 200 --stream-tasks 50
     python benchmarks/exp5_statepath.py --tasks 500 --records 5000 \
         --lookups 500 --producers 128 --repeats 2
     python benchmarks/exp6_locality.py --chains 4 --depth 4 --repeats 1
     python benchmarks/exp7_preempt.py --repeats 1 --long-steps 8 --shorts 4
+    # proc-vs-inproc gate self-skips below 2 visible cores (exp8 prints
+    # the reason and still emits BENCH_procpool.json)
+    python benchmarks/exp8_procpool.py --noop-tasks 200 --burn-tasks 24 \
+        --repeats 2 --min-proc-speedup 1.3
 fi

@@ -21,19 +21,26 @@ from .placement import (LeastLoaded, LocalityAware, PlacementPolicy,
 from .rpex import RPEXExecutor
 from .scheduler import SlotScheduler
 from .spmd_executor import SPMDFunctionExecutor
+from .serializer import (RemoteError, RemoteTraceback, SerializationError,
+                         UnserializableResult)
 from .store import StateStore, overhead_from_events, union_intervals
 from .translator import bind_future, detect_kind, translate
+from .transport import (InprocTransport, ProcessTransport, WorkerDied,
+                        make_transport)
 
 __all__ = [
     "Agent", "AppFuture", "Checkpoint", "CheckpointStore",
-    "DataFlowKernel", "Executor", "LeastLoaded",
+    "DataFlowKernel", "Executor", "InprocTransport", "LeastLoaded",
     "LocalityAware", "ParslTask", "Pilot", "PilotDescription",
     "PilotManager", "PilotPool", "PlacementPolicy", "PoolScaler",
-    "RPEXExecutor", "ResourceSpec", "SPMDFunctionExecutor", "ScalerConfig",
-    "SlotScheduler", "StateStore", "TaskManager", "TaskPreempted",
-    "TaskRecord", "TaskState",
-    "ThreadPoolExecutor", "affinity_match", "bash_app", "bind_future",
-    "current_dfk", "detect_kind", "new_uid", "overhead_from_events",
+    "ProcessTransport", "RPEXExecutor", "RemoteError", "RemoteTraceback",
+    "ResourceSpec", "SPMDFunctionExecutor", "ScalerConfig",
+    "SerializationError", "SlotScheduler", "StateStore", "TaskManager",
+    "TaskPreempted", "TaskRecord", "TaskState",
+    "ThreadPoolExecutor", "UnserializableResult", "WorkerDied",
+    "affinity_match", "bash_app", "bind_future",
+    "current_dfk", "detect_kind", "make_transport", "new_uid",
+    "overhead_from_events",
     "prefer_free_slots", "prefer_specialized", "python_app",
     "resolve_policy", "spmd_app", "translate", "union_intervals",
 ]

@@ -6,10 +6,14 @@ change schedulability — task submission, slot release (via the scheduler's
 listener hook), elastic grow, retry requeue, or shutdown.  There is no
 polling sleep anywhere on the submit -> schedule -> run -> complete path.
 
-Scheduled tasks are executed by a *persistent* worker pool (the
-MPI-Master/Worker analog): workers are spawned lazily up to ``max_workers``
-and then live for the agent's lifetime, pulling from a ready queue, so the
-hot path pays one queue handoff instead of an OS thread spawn per task.
+Scheduled tasks are executed through a pluggable **WorkerTransport**
+(transport.py) — the paper's master/worker split as a seam: the agent
+schedules and keeps every piece of bookkeeping in the transport's local
+pool threads; only the body call (``transport.execute``) differs by mode.
+``InprocTransport`` (default) is the original persistent thread pool —
+workers spawn lazily up to ``max_workers``, idle ones reap themselves
+after ``worker_idle_s`` — and ``ProcessTransport`` runs python/bash
+bodies in worker OS processes, off the GIL.
 
 Scheduling keeps the priority/FIFO wait heap with bounded backfill (later
 small tasks may run ahead of a blocked large task, never starving it).  A
@@ -46,7 +50,6 @@ Running/Idle) can be integrated offline.
 from __future__ import annotations
 
 import heapq
-import queue
 import threading
 import time
 from collections import deque
@@ -57,8 +60,7 @@ from .futures import TERMINAL, ResourceSpec, TaskRecord, TaskState, new_uid
 from .scheduler import SlotScheduler
 from .spmd_executor import SPMDFunctionExecutor
 from .store import StateStore
-
-_SENTINEL = object()
+from .transport import InprocTransport
 
 
 class Agent:
@@ -72,7 +74,9 @@ class Agent:
                  straggler_min_deadline: float = 0.1,
                  monitor_interval: float = 0.02,
                  poll_interval: Optional[float] = None,
-                 ckpt_store: Optional[CheckpointStore] = None):
+                 ckpt_store: Optional[CheckpointStore] = None,
+                 transport=None,
+                 worker_idle_s: float = 30.0):
         self.scheduler = scheduler
         self.executor = executor
         self.store = store or StateStore()
@@ -109,10 +113,11 @@ class Agent:
         self._accepting = True      # False once draining/stopped: submit
                                     # refuses instead of heaping tasks no
                                     # scheduler thread will ever drain
-        self._ready: "queue.SimpleQueue" = queue.SimpleQueue()
-        self._workers: List[threading.Thread] = []
-        self._ready_count = 0       # dispatched, not yet claimed by a worker
-        self._executing = 0         # claimed by a worker, still running
+        # the worker pool lives behind the transport; the agent's runner
+        # (_run_task, all bookkeeping) is its per-task callback
+        self.transport = (transport if transport is not None
+                          else InprocTransport(max_workers, worker_idle_s))
+        self.transport.start(self._run_task, executor)
         self._demand_slots = 0      # slots of all outstanding tasks (O(1)
                                     # routing load metric)
         self._queued_slots = 0      # slots of queued-but-not-dispatched
@@ -234,15 +239,14 @@ class Agent:
                 self._cv.wait_for(lambda: self._outstanding == 0, timeout)
         with self._cv:
             # set under the cv so the submit fast path can never observe
-            # "not stopped", then spawn a worker after the sentinel count
-            # below is read — no worker is ever left without a sentinel
+            # "not stopped"; the scheduler thread joins before the pool is
+            # poisoned, so no dispatch can race a shutting-down transport
             self._stop.set()
             self._cv.notify_all()
         if self._started:
             self._sched_thread.join(timeout=5.0)   # no more dispatches after
             self._mon_thread.join(timeout=5.0)
-        for _ in range(len(self._workers)):
-            self._ready.put(_SENTINEL)
+        self.transport.shutdown()
 
     def inject_slot_failure(self, slots):
         """Simulate node failure: victims are FAILED then retried elsewhere."""
@@ -469,33 +473,14 @@ class Agent:
                 self._dirty = True
 
     def _dispatch(self, task: TaskRecord):
-        """Hand a scheduled task to the worker pool.  Caller holds self._cv.
-        The pool grows until it covers all claimed work (executing + queued
-        ready), so tasks scheduled in one pass run concurrently."""
-        self._ready_count += 1
-        want = self._executing + self._ready_count
-        if len(self._workers) < min(self.max_workers, want):
-            th = threading.Thread(target=self._worker, daemon=True)
-            self._workers.append(th)
-            th.start()
-        self._ready.put(task)
+        """Hand a scheduled task to the transport's worker pool (which
+        grows lazily until it covers all claimed work, so tasks scheduled
+        in one pass run concurrently).  Caller holds self._cv; the
+        transport takes only its own pool lock and never calls back into
+        the agent from under it, so the ordering is acyclic."""
+        self.transport.dispatch(task)
 
     # ---------------------------- execution ----------------------------- #
-    def _worker(self):
-        """Persistent pool worker (the MPI-Worker analog)."""
-        while True:
-            item = self._ready.get()
-            if item is _SENTINEL:
-                return
-            with self._cv:
-                self._ready_count -= 1
-                self._executing += 1
-            try:
-                self._run_task(item)
-            finally:
-                with self._cv:
-                    self._executing -= 1
-
     def _run_task(self, task: TaskRecord):
         task.transition(TaskState.LAUNCHING, self.store)
         ctx = None
@@ -514,7 +499,7 @@ class Agent:
                                                  task.resources.mesh_shape)
                 task.transition(TaskState.RUNNING, self.store)
                 t0 = time.monotonic()
-                result = self.executor.execute(task)
+                result = self.transport.execute(task)
                 dt = time.monotonic() - t0
                 if task.error is not None:     # slot failed mid-flight
                     raise task.error

@@ -262,6 +262,10 @@ class Checkpoint:
         self.store = store
         self.key = key
         self._preempt = threading.Event()
+        # transport hook: a process-mode transport points this at a
+        # "forward the preempt flag down the worker pipe" closure while
+        # the body runs remotely, so request_preempt() reaches the child
+        self._forward: Optional[callable] = None
 
     def restore(self) -> Optional[Tuple[int, Any]]:
         """(last_saved_step, state), or None on a fresh start."""
@@ -279,5 +283,16 @@ class Checkpoint:
         return self._preempt.is_set()
 
     def request_preempt(self):
-        """Agent-side: ask the body to unwind at its next save."""
+        """Agent-side: ask the body to unwind at its next save.  When the
+        body executes in a worker process, the attached transport hook
+        forwards the flag over the control pipe; the flag is also set
+        locally first, so a hook attached *after* this call still sees it
+        (the transport re-forwards on attach)."""
         self._preempt.set()
+        fwd = self._forward
+        if fwd is not None:
+            try:
+                fwd()
+            except Exception:  # noqa: BLE001 — a dying pipe must not
+                pass           # break the requester; the driver thread
+                               # surfaces WorkerDied on its own

@@ -115,6 +115,10 @@ class TaskRecord:
                                     # task executes (runtime-only, never
                                     # journaled; the executor injects it
                                     # as the body's ``ckpt`` kwarg)
+    inproc_only: bool = False       # translator stamp: the body must run
+                                    # in the agent's process regardless of
+                                    # transport (spmd — its sub-mesh is
+                                    # bound to this process's XLA client)
 
     def transition(self, state: TaskState, store=None):
         self.state = state

@@ -49,6 +49,7 @@ from .placement import PlacementPolicy, resolve_policy
 from .scheduler import SlotScheduler
 from .spmd_executor import SPMDFunctionExecutor
 from .store import StateStore
+from .transport import make_transport
 
 
 @dataclass
@@ -64,6 +65,13 @@ class PilotDescription:
                                              # (e.g. ("python", "bash") or
                                              # ("spmd",)); None = accept all
     name: Optional[str] = None        # human-readable pilot label
+    transport: str = "inproc"         # worker transport: "inproc" (thread
+                                      # pool, default) or "proc" (worker
+                                      # OS processes — python/bash bodies
+                                      # run off the GIL; spmd stays local)
+    worker_idle_s: float = 30.0       # pool threads idle longer than this
+                                      # reap themselves (bounded pool)
+    proc_start_method: Optional[str] = None  # "fork" (default) | "spawn"
 
 
 class Pilot:
@@ -81,12 +89,17 @@ class Pilot:
                            max_workers=desc.max_workers,
                            backfill_window=desc.backfill_window,
                            straggler_factor=desc.straggler_factor,
-                           ckpt_store=self.ckpt).start()
+                           ckpt_store=self.ckpt,
+                           transport=make_transport(
+                               desc.transport, desc.max_workers,
+                               idle_s=desc.worker_idle_s,
+                               start_method=desc.proc_start_method)).start()
         self.t_start = time.monotonic()
         self.draining = False     # a draining pilot accepts no new work
         self._closed = False
         self.store.record_event("PILOT_START", pilot=self.uid, n_slots=n,
-                                kinds=list(desc.kinds or ()) or None)
+                                kinds=list(desc.kinds or ()) or None,
+                                transport=desc.transport)
 
     # routing ----------------------------------------------------------- #
     def accepts(self, task: TaskRecord) -> bool:

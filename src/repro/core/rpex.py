@@ -14,6 +14,13 @@ pluggable ``PlacementPolicy`` (least-loaded by default), so one executor
 serves heterogeneous tasks on heterogeneous resources (the paper's
 central claim).
 
+Descriptions may also mix *worker transports* (see docs/processes.md):
+``PilotDescription(transport="proc")`` gives that pilot a pool of worker
+OS processes executing python/bash bodies off the GIL (the RP
+master/worker split), while ``"inproc"`` (default) keeps the original
+thread pool — e.g. a proc CPU pilot for compute-heavy python tasks next
+to an inproc device pilot for SPMD tasks, in one pool.
+
 Placement is configured with the ``placement=`` kwarg: a policy name
 (``"least-loaded"`` — the default — or ``"locality"``) or any
 ``repro.core.placement.PlacementPolicy`` instance, e.g.

@@ -74,6 +74,9 @@ def translate(fn: Callable, args: tuple, kwargs: dict,
         sticky=res.sticky,
         affinity=tuple(dict.fromkeys(aff)) if aff else (),
         checkpointable=res.checkpointable,
+        inproc_only=(kind == "spmd"),   # a sub-mesh binds to the agent
+                                        # process's XLA client: a proc
+                                        # transport routes spmd inproc
         ckpt_key=uid,       # replicas inherit it; keyed workflows replace
                             # it with the stable workflow key (restart)
         res_kind=res.res_kind or (

@@ -1,0 +1,488 @@
+"""WorkerTransport — pluggable agent→worker call path.
+
+The Agent schedules; a *transport* executes.  This is the paper's
+master/worker split (RP's MPI executor: the agent process schedules, OS
+processes run task bodies) extracted behind one seam so a Pilot can own
+either of:
+
+  * ``InprocTransport`` (default) — the original persistent thread pool.
+    Task bodies run in the agent's process; byte-for-byte the pre-split
+    behavior, and the only mode for spmd tasks (a sub-mesh is bound to
+    this process's XLA client).
+
+  * ``ProcessTransport`` — a lazily-grown pool of OS worker processes,
+    one duplex pipe each.  Python/bash task bodies execute *off the GIL*:
+    the local pool thread that drives a task blocks in ``Connection.recv``
+    (GIL released) while the child burns a core, so bulk CPU-bound
+    throughput scales with cores instead of serializing behind the
+    interpreter lock (the exp3 ceiling ROADMAP item 3 calls out).
+
+Both transports share the local thread-pool machinery (``_PoolBase``):
+the agent's bookkeeping — state transitions, finish paths, replica and
+preempt logic — always runs in these local threads, so every Agent
+invariant holds identically in both modes; only the body call in
+``execute()`` differs.  The pool is bounded *and reaped*: a thread idle
+longer than ``idle_s`` with no undispatched work retires itself, so a
+64-task burst does not leave 64 live threads at steady state.
+
+Process-mode protocol (FIFO pipe, one in-flight run per worker, per-run
+``seq`` so a stale message from a previous run can never poison the
+next task on a reused worker):
+
+  parent → child:  ("run", seq, payload, checkpointable, key, snapshot)
+                   ("preempt", seq)            cooperative preempt flag
+                   ("save_ack", seq, preempt)  checkpoint persisted
+                   ("stop",)
+  child → parent:  ("save", seq, step, blob)   body called ckpt.save
+                   ("done", seq, blob)         result crossed back
+                   ("done_raw", seq, info)     result could not cross
+                   ("preempted", seq, step)    body unwound at a save
+                   ("error", seq, blob)        packed remote exception
+
+Checkpoint proxying keeps the inproc persist-then-raise contract across
+the boundary: the child's ``ckpt.save`` *blocks* until the parent has
+persisted the step through the pilot's CheckpointStore and acked with
+the current preempt flag — only then does the body continue (or unwind
+with ``TaskPreempted``), so a handed-off task always has its last step
+durable parent-side.  ``restore`` is a snapshot shipped with the run
+request (the latest parent-side checkpoint).  Preempt requests travel
+``Checkpoint._forward`` → pipe → the child's flag, honored at its next
+``save``/``preempt_requested`` poll — exactly the inproc cadence.
+
+Worker death (crash, OOM-kill, fault injection) surfaces as an EOF on
+the pipe: the in-flight task FAILs visibly with ``WorkerDied`` (feeding
+the agent's normal retry/replica paths), the slot is released by the
+usual finish path, the corpse is discarded, and the pool lazily
+respawns on the next checkout.  spmd tasks (``TaskRecord.inproc_only``,
+stamped by the translator) and bodies the serializer cannot ship fall
+back to in-process execution rather than failing the task.
+"""
+from __future__ import annotations
+
+import multiprocessing
+import queue
+import threading
+import warnings
+from typing import Callable, Optional
+
+from . import serializer
+from .checkpoint import TaskPreempted
+
+_SENTINEL = object()
+
+
+class WorkerDied(RuntimeError):
+    """A process-mode worker died while (or before) running a task; the
+    task FAILs through the agent's normal fault path and may retry."""
+
+
+class _PoolBase:
+    """Local persistent thread pool (the MPI-Worker analog) shared by
+    both transports: lazy growth to ``max_workers``, bounded idle (a
+    worker idle > ``idle_s`` with nothing undispatched reaps itself),
+    and dropped handles for exited threads."""
+
+    def __init__(self, max_workers: int = 32, idle_s: float = 30.0):
+        self.max_workers = max_workers
+        self.idle_s = idle_s
+        self.executor = None            # set by start()
+        self._run_cb: Optional[Callable] = None
+        self._q: "queue.SimpleQueue" = queue.SimpleQueue()
+        self._lock = threading.Lock()
+        self._threads: set = set()
+        self._ready = 0                 # dispatched, not yet claimed
+        self._executing = 0             # claimed, still running
+
+    # ------------------------------ protocol ----------------------------- #
+    def start(self, run_cb: Callable, executor) -> "_PoolBase":
+        """Bind the agent's per-task runner and its (inproc) executor.
+        Threads stay lazy; nothing spawns until the first dispatch."""
+        self._run_cb = run_cb
+        self.executor = executor
+        return self
+
+    def dispatch(self, task):
+        """Hand a scheduled task to the pool.  Grows until the thread set
+        covers all claimed work (executing + undispatched), so tasks
+        scheduled in one pass run concurrently."""
+        with self._lock:
+            self._ready += 1
+            want = self._executing + self._ready
+            if len(self._threads) < min(self.max_workers, want):
+                th = threading.Thread(target=self._worker_loop, daemon=True)
+                self._threads.add(th)
+                th.start()
+        self._q.put(task)
+
+    def execute(self, task):
+        raise NotImplementedError
+
+    def shutdown(self):
+        with self._lock:
+            n = len(self._threads)
+        for _ in range(n):              # one poison pill per live thread;
+            self._q.put(_SENTINEL)      # a racing self-reap leaves a spare
+                                        # pill in the queue, harmlessly
+
+    @property
+    def n_threads(self) -> int:
+        """Live pool threads (the hygiene-regression observable)."""
+        with self._lock:
+            return len(self._threads)
+
+    @property
+    def n_idle(self) -> int:
+        with self._lock:
+            return len(self._threads) - self._executing
+
+    # ------------------------------ internals ---------------------------- #
+    def _worker_loop(self):
+        me = threading.current_thread()
+        while True:
+            try:
+                item = self._q.get(timeout=self.idle_s)
+            except queue.Empty:
+                with self._lock:
+                    if self._ready == 0:
+                        # idle past the bound with nothing undispatched:
+                        # retire.  dispatch() increments _ready under
+                        # this lock *before* the queue put, so a racing
+                        # dispatch either sees us gone (and spawns a
+                        # replacement) or we see its claim and keep
+                        # waiting — a task is never stranded.
+                        self._threads.discard(me)
+                        return
+                continue                # claimed work is in flight to the
+                                        # queue — wait another round
+            if item is _SENTINEL:
+                with self._lock:
+                    self._threads.discard(me)
+                return
+            with self._lock:
+                self._ready -= 1
+                self._executing += 1
+            try:
+                self._run_cb(item)
+            finally:
+                with self._lock:
+                    self._executing -= 1
+
+
+class InprocTransport(_PoolBase):
+    """The original in-process pool: body runs on the pool thread via the
+    agent's SPMDFunctionExecutor.  Default; behavior-compatible."""
+
+    name = "inproc"
+
+    def execute(self, task):
+        return self.executor.execute(task)
+
+
+class _ProcWorker:
+    __slots__ = ("proc", "conn", "send_lock", "seq")
+
+    def __init__(self, proc, conn):
+        self.proc = proc
+        self.conn = conn
+        self.send_lock = threading.Lock()   # driver (save_ack) and the
+        self.seq = 0                        # preempt forwarder both send
+
+
+class ProcessTransport(_PoolBase):
+    """Process pool: each local pool thread drives at most one worker
+    process over a duplex pipe; the body executes in the child, off the
+    GIL.  Workers spawn lazily up to ``max_workers``, are reused across
+    tasks, and are discarded + lazily respawned on death."""
+
+    name = "proc"
+
+    def __init__(self, max_workers: int = 32, idle_s: float = 30.0,
+                 start_method: Optional[str] = None):
+        super().__init__(max_workers, idle_s)
+        # fork is the cheap default on linux (the child never touches the
+        # parent's XLA runtime: the serializer host-transfers jax leaves
+        # before they cross); spawn is the conservative opt-in
+        self._mp = multiprocessing.get_context(start_method or "fork")
+        self._pcond = threading.Condition()
+        self._free: list = []           # idle workers (LIFO: warm reuse)
+        self._all: set = set()          # every live worker (shutdown sweep)
+        self._total = 0                 # live + being-spawned workers
+
+    # ------------------------------ execution ---------------------------- #
+    def execute(self, task):
+        if task.inproc_only or task.kind == "spmd":
+            # a sub-mesh is bound to the parent's XLA client — spmd never
+            # crosses (the translator stamps inproc_only accordingly)
+            return self.executor.execute(task)
+        kwargs = dict(task.kwargs)
+        kwargs.pop("_jit", None)        # spmd-only knob; meaningless here
+        kwargs.pop("ckpt", None)        # the child injects its own proxy
+        try:
+            payload = serializer.pack_task(task.fn, task.args, kwargs)
+        except serializer.SerializationError:
+            # body cannot ship — degrade to in-process execution instead
+            # of failing the task (same spirit as the result-side
+            # degradation: correctness first, parallelism best-effort)
+            return self.executor.execute(task)
+        w = self._checkout()
+        try:
+            result = self._drive(w, task, payload)
+        except WorkerDied:
+            self._discard(w)
+            raise                       # agent's fault path: FAIL + retry
+        except BaseException:           # noqa: BLE001 — remote error or
+            self._checkin(w)            # TaskPreempted: worker is healthy
+            raise
+        self._checkin(w)
+        return result
+
+    def _drive(self, w: _ProcWorker, task, payload: bytes):
+        """Run one task on one worker: send the run request, then pump
+        the pipe until a terminal message.  Raises WorkerDied on EOF."""
+        w.seq += 1
+        seq = w.seq
+        ctx = task.ckpt_ctx
+        key = task.ckpt_key or task.uid
+        snapshot = None
+        if ctx is not None:
+            got = ctx.restore()         # parent-side latest checkpoint
+            if got is not None:
+                try:
+                    snapshot = (got[0], serializer.dumps(got[1]))
+                except serializer.SerializationError:
+                    snapshot = None     # unshippable state: fresh start
+        self._send(w, ("run", seq, payload, ctx is not None, key, snapshot))
+        if ctx is not None:
+            def _fwd():
+                try:
+                    self._send(w, ("preempt", seq))
+                except WorkerDied:
+                    pass                # the recv loop will surface it
+            ctx._forward = _fwd
+            if ctx.preempt_requested():
+                _fwd()                  # request landed before the hook —
+                                        # re-send now that the run is out
+        try:
+            while True:
+                try:
+                    msg = w.conn.recv()
+                except (EOFError, OSError) as e:
+                    raise WorkerDied(
+                        f"worker pid {w.proc.pid} died while running "
+                        f"{task.uid}") from e
+                if msg[1] != seq:
+                    continue            # stale leftover from a prior run
+                tag = msg[0]
+                if tag == "save":
+                    _, _, step, blob = msg
+                    if ctx is not None and blob is not None:
+                        # persist through the pilot's CheckpointStore
+                        # BEFORE acking: the child's save() blocks until
+                        # the step is durable here (persist-then-raise,
+                        # same as inproc).  blob=None means the state
+                        # could not cross — ack anyway, the body keeps
+                        # running with a non-durable step (the store's
+                        # own memory-only fallback has the same shape).
+                        ctx.store.save(key, step, serializer.loads(blob))
+                    pre = ctx is not None and ctx.preempt_requested()
+                    self._send(w, ("save_ack", seq, pre))
+                elif tag == "done":
+                    return serializer.loads(msg[2])
+                elif tag == "done_raw":
+                    return serializer.UnserializableResult(*msg[2])
+                elif tag == "preempted":
+                    raise TaskPreempted(key, msg[2])
+                elif tag == "error":
+                    raise serializer.unpack_exception(msg[2])
+        finally:
+            if ctx is not None:
+                ctx._forward = None
+    # ----------------------------- worker pool --------------------------- #
+    def _send(self, w: _ProcWorker, msg):
+        try:
+            with w.send_lock:
+                w.conn.send(msg)
+        except (OSError, ValueError, BrokenPipeError) as e:
+            raise WorkerDied(
+                f"worker pid {w.proc.pid} pipe closed") from e
+
+    def _checkout(self) -> _ProcWorker:
+        with self._pcond:
+            while True:
+                while self._free:
+                    w = self._free.pop()
+                    if w.proc.is_alive():
+                        return w
+                    self._all.discard(w)    # died while idle: silent drop
+                    self._total -= 1
+                    self._close(w)
+                if self._total < self.max_workers:
+                    self._total += 1
+                    break
+                self._pcond.wait(1.0)       # a thread beyond max_workers
+                                            # waits for a checkin (cannot
+                                            # happen while threads share
+                                            # the same bound, but cheap)
+        try:
+            w = self._spawn()
+        except BaseException:
+            with self._pcond:
+                self._total -= 1
+                self._pcond.notify()
+            raise
+        with self._pcond:
+            self._all.add(w)
+        return w
+
+    def _checkin(self, w: _ProcWorker):
+        with self._pcond:
+            self._free.append(w)
+            self._pcond.notify()
+
+    def _discard(self, w: _ProcWorker):
+        """Drop a dead (or poisoned) worker; the pool respawns lazily on
+        the next checkout."""
+        with self._pcond:
+            self._all.discard(w)
+            self._total -= 1
+            self._pcond.notify()
+        self._close(w)
+
+    def _spawn(self) -> _ProcWorker:
+        parent, child = self._mp.Pipe(duplex=True)
+        p = self._mp.Process(target=_proc_worker_main, args=(child,),
+                             daemon=True)
+        with warnings.catch_warnings():
+            # jax warns on os.fork() in its multithreaded parent; the
+            # child only pumps the pipe and runs user bodies — it never
+            # calls into the parent's XLA runtime (array leaves are
+            # host-transferred by the serializer before crossing)
+            warnings.simplefilter("ignore", RuntimeWarning)
+            p.start()
+        child.close()
+        return _ProcWorker(p, parent)
+
+    @staticmethod
+    def _close(w: _ProcWorker):
+        try:
+            w.conn.close()
+        except OSError:
+            pass
+        if w.proc.is_alive():
+            w.proc.terminate()
+        w.proc.join(timeout=1.0)
+
+    @property
+    def n_procs(self) -> int:
+        with self._pcond:
+            return self._total
+
+    def shutdown(self):
+        super().shutdown()              # poison the local threads first
+        with self._pcond:
+            workers = list(self._all)
+            self._all.clear()
+            self._free.clear()
+            self._total = 0
+        for w in workers:
+            try:
+                with w.send_lock:
+                    w.conn.send(("stop",))
+            except (OSError, ValueError):
+                pass
+        for w in workers:
+            w.proc.join(timeout=1.0)
+            self._close(w)
+
+
+# ----------------------------- child side -------------------------------- #
+class _RemoteCheckpoint:
+    """Child-side Checkpoint proxy: same interface the body sees inproc
+    (restore/save/preempt_requested), backed by the pipe.  ``save``
+    blocks for the parent's ack so persist-then-raise survives the
+    boundary."""
+
+    def __init__(self, conn, key: str, seq: int, snapshot):
+        self.key = key
+        self._conn = conn
+        self._seq = seq
+        self._snapshot = snapshot       # (step, state) shipped with "run"
+        self._preempt = False
+
+    def restore(self):
+        return self._snapshot
+
+    def save(self, step: int, state):
+        blob, _ = serializer.pack_result(state)     # None = cannot cross;
+        self._conn.send(("save", self._seq, step, blob))  # parent skips
+        while True:                                       # the persist
+            msg = self._conn.recv()
+            if msg[0] == "save_ack" and msg[1] == self._seq:
+                if msg[2] or self._preempt:
+                    self._preempt = True
+                    raise TaskPreempted(self.key, step)
+                return
+            if msg[0] == "preempt":
+                if msg[1] == self._seq:
+                    self._preempt = True
+                continue                # stale seq: a prior run's flag
+
+    def preempt_requested(self) -> bool:
+        while self._conn.poll(0):       # drain any pending preempt flag;
+            msg = self._conn.recv()     # no ack is outstanding here, so
+            if msg[0] == "preempt" and msg[1] == self._seq:
+                self._preempt = True    # only "preempt" can be queued
+        return self._preempt
+
+
+def _proc_worker_main(conn):
+    """Worker-process entry: one run at a time, reused across tasks."""
+    while True:
+        try:
+            msg = conn.recv()
+        except (EOFError, OSError, KeyboardInterrupt):
+            return
+        if msg[0] == "stop":
+            conn.close()
+            return
+        if msg[0] != "run":
+            continue                    # stale preempt from a finished run
+        _, seq, payload, checkpointable, key, snapshot = msg
+        try:
+            fn, args, kwargs = serializer.loads(payload)
+            if checkpointable:
+                snap = None
+                if snapshot is not None:
+                    snap = (snapshot[0], serializer.loads(snapshot[1]))
+                kwargs["ckpt"] = _RemoteCheckpoint(conn, key, seq, snap)
+            result = fn(*args, **kwargs)
+            blob, degraded = serializer.pack_result(result)
+            if blob is None:
+                conn.send(("done_raw", seq, degraded))
+            else:
+                conn.send(("done", seq, blob))
+        except TaskPreempted as e:
+            conn.send(("preempted", seq, e.step))
+        except KeyboardInterrupt:
+            return
+        except BaseException as e:      # noqa: BLE001 — ship it back whole
+            try:
+                conn.send(("error", seq, serializer.pack_exception(e)))
+            except (OSError, ValueError):
+                return                  # parent is gone
+
+
+# ------------------------------- factory ---------------------------------- #
+TRANSPORTS = ("inproc", "proc")
+
+
+def make_transport(name: Optional[str], max_workers: int = 32,
+                   idle_s: float = 30.0,
+                   start_method: Optional[str] = None):
+    """Build a transport from a PilotDescription's knobs."""
+    if name in (None, "inproc"):
+        return InprocTransport(max_workers, idle_s)
+    if name == "proc":
+        return ProcessTransport(max_workers, idle_s, start_method)
+    raise ValueError(
+        f"unknown transport {name!r}; expected one of {TRANSPORTS}")

@@ -643,3 +643,100 @@ def test_rp_overhead_accessor_live():
         assert oh < wall - 0.1
     finally:
         rpex.shutdown()
+
+
+# --------------------- proc-worker fault injection ----------------------- #
+
+def _wait_for_file(path, timeout=20.0):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        try:
+            txt = path.read_text().strip()
+            if txt:
+                return txt
+        except OSError:
+            pass
+        time.sleep(0.02)
+    raise AssertionError(f"{path} never appeared")
+
+
+def test_proc_worker_death_fails_task_and_pool_respawns(tmp_path):
+    """Chaos: SIGKILL a proc-mode worker mid-task.  The in-flight task
+    must FAIL visibly (WorkerDied, not a hang), its slot must come back,
+    and the pool must respawn a worker for the next task."""
+    import os
+    import signal
+
+    from repro.core import WorkerDied
+
+    rpex = RPEXExecutor(PilotDescription(n_slots=2, transport="proc"))
+    try:
+        pidfile = tmp_path / "victim.pid"
+
+        @python_app
+        def stall(pf):
+            import os as _os
+            import time as _time
+            with open(pf, "w") as fh:
+                fh.write(str(_os.getpid()))
+            _time.sleep(60)            # killed long before this returns
+
+        @python_app
+        def probe():
+            return "alive"
+
+        with DataFlowKernel(executors={"rpex": rpex}):
+            f = stall(str(pidfile))
+            pid = int(_wait_for_file(pidfile))
+            os.kill(pid, signal.SIGKILL)
+            with pytest.raises(WorkerDied):
+                f.result(timeout=20)   # FAILED, not hung
+            assert f.task.state == TaskState.FAILED
+            # slot released + lazy respawn: new work still completes
+            assert probe().result(timeout=20) == "alive"
+        agent = rpex.pilot.agent
+        assert agent.scheduler.n_free == 2     # no leaked allocation
+    finally:
+        rpex.shutdown()
+
+
+def test_proc_worker_death_retry_path_fires(tmp_path):
+    """A task whose worker is killed retries like any other failure: the
+    second attempt lands on a respawned worker and succeeds."""
+    import os
+    import signal
+
+    p = Pilot(PilotDescription(n_slots=2, transport="proc"))
+    try:
+        flag = tmp_path / "first-attempt"
+        pidfile = tmp_path / "victim.pid"
+
+        def flaky(flagp, pidp):
+            import os as _os
+            import time as _time
+            if not _os.path.exists(flagp):
+                with open(flagp, "w") as fh:
+                    fh.write("x")
+                with open(pidp, "w") as fh:
+                    fh.write(str(_os.getpid()))
+                _time.sleep(60)        # first attempt: killed here
+            return 42                  # retry: clean success
+
+        t = translate(flaky, (str(flag), str(pidfile)), {}, max_retries=1)
+        t.transition(TaskState.TRANSLATED, p.store)
+        done = threading.Event()
+        box = {}
+
+        def cb(task):
+            box["state"], box["result"] = task.state, task.result
+            done.set()
+
+        assert p.agent.submit(t, done_cb=cb)
+        pid = int(_wait_for_file(pidfile))
+        os.kill(pid, signal.SIGKILL)
+        assert done.wait(30), "retry after worker death never completed"
+        assert box["state"] == TaskState.DONE
+        assert box["result"] == 42
+        assert t.retries == 1
+    finally:
+        p.close()

@@ -267,7 +267,7 @@ def test_worker_pool_is_persistent():
             futs = [noop(i) for i in range(100)]
             assert [f.result(timeout=30) for f in futs] == list(range(100))
         agent = rpex.pilot.agent
-        assert len(agent._workers) <= 4
+        assert agent.transport.n_threads <= 4
     finally:
         rpex.shutdown()
 
