@@ -60,6 +60,14 @@ _BENCH_HEADLINES = {
         (("cpu_burn", "proc", "gil_bound"), "proc gil_bound", "{:.2f}"),
         (("config", "cores"), "cores", "{:d}"),
     ],
+    "BENCH_costmodel.json": [
+        (("placement", "ratio"), "cost vs counted", "{:.2f}x"),
+        (("placement", "cost_model", "makespan_s"), "probe makespan s",
+         "{:.3f}"),
+        (("straggler", "per_kind", "replicas"), "per-kind replicas", "{:d}"),
+        (("straggler", "global_p95", "replicas"), "global-p95 replicas",
+         "{:d}"),
+    ],
 }
 
 

@@ -17,7 +17,8 @@ fi
 
 # runtime micro-benchmark smoke (fast settings; the full runs are
 # `python benchmarks/exp3_throughput.py` / `exp5_statepath.py` /
-# `exp6_locality.py` / `exp7_preempt.py` / `exp8_procpool.py`)
+# `exp6_locality.py` / `exp7_preempt.py` / `exp8_procpool.py` /
+# `exp9_costmodel.py`)
 if [[ "${CI_BENCH:-0}" == "1" ]]; then
     python benchmarks/exp3_throughput.py --tasks 200 --stream-tasks 50
     python benchmarks/exp5_statepath.py --tasks 500 --records 5000 \
@@ -28,4 +29,6 @@ if [[ "${CI_BENCH:-0}" == "1" ]]; then
     # the reason and still emits BENCH_procpool.json)
     python benchmarks/exp8_procpool.py --noop-tasks 200 --burn-tasks 24 \
         --repeats 2 --min-proc-speedup 1.3
+    python benchmarks/exp9_costmodel.py --repeats 1 --probes 4 \
+        --min-makespan-ratio 1.3
 fi

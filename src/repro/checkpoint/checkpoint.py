@@ -146,8 +146,13 @@ class Checkpointer:
                 raise ValueError(f"leaf {i}: shape {arr.shape} != {ref.shape}")
             if sh is not None:
                 out.append(jax.device_put(arr, sh))
-            elif isinstance(ref, np.ndarray):
-                out.append(arr.astype(ref.dtype))   # host-side leaf stays np
-            else:
+            elif isinstance(ref, jax.Array):
+                # device leaf: ref.dtype is backend-supported by
+                # construction, so asarray never truncates
                 out.append(jax.numpy.asarray(arr, dtype=ref.dtype))
+            else:
+                # host-side leaf (np.ndarray or np scalar): stay in numpy —
+                # routing through jnp would silently truncate dtypes the
+                # backend lacks (float64 under default x32)
+                out.append(arr.astype(ref.dtype))
         return step, jax.tree.unflatten(treedef, out)

@@ -12,11 +12,11 @@ from .checkpoint import Checkpoint, CheckpointStore, TaskPreempted
 from .dfk import DataFlowKernel, current_dfk
 from .executors import Executor, ParslTask, ThreadPoolExecutor
 from .futures import (AppFuture, ResourceSpec, TaskRecord, TaskState,
-                      new_uid)
+                      model_kind, new_uid)
 from .pilot import (Pilot, PilotDescription, PilotManager, PilotPool,
                     PoolScaler, ScalerConfig, TaskManager)
-from .placement import (LeastLoaded, LocalityAware, PlacementPolicy,
-                        affinity_match, prefer_free_slots,
+from .placement import (CostModelPolicy, LeastLoaded, LocalityAware,
+                        PlacementPolicy, affinity_match, prefer_free_slots,
                         prefer_specialized, resolve_policy)
 from .rpex import RPEXExecutor
 from .scheduler import SlotScheduler
@@ -30,6 +30,7 @@ from .transport import (InprocTransport, ProcessTransport, WorkerDied,
 
 __all__ = [
     "Agent", "AppFuture", "Checkpoint", "CheckpointStore",
+    "CostModelPolicy",
     "DataFlowKernel", "Executor", "InprocTransport", "LeastLoaded",
     "LocalityAware", "ParslTask", "Pilot", "PilotDescription",
     "PilotManager", "PilotPool", "PlacementPolicy", "PoolScaler",
@@ -39,7 +40,7 @@ __all__ = [
     "TaskPreempted", "TaskRecord", "TaskState",
     "ThreadPoolExecutor", "UnserializableResult", "WorkerDied",
     "affinity_match", "bash_app", "bind_future",
-    "current_dfk", "detect_kind", "make_transport", "new_uid",
+    "current_dfk", "detect_kind", "make_transport", "model_kind", "new_uid",
     "overhead_from_events",
     "prefer_free_slots", "prefer_specialized", "python_app",
     "resolve_policy", "spmd_app", "translate", "union_intervals",

@@ -56,7 +56,8 @@ from collections import deque
 from typing import Callable, Dict, List, Optional, Tuple
 
 from .checkpoint import Checkpoint, CheckpointStore, TaskPreempted
-from .futures import TERMINAL, ResourceSpec, TaskRecord, TaskState, new_uid
+from .futures import (TERMINAL, ResourceSpec, TaskRecord, TaskState,
+                      model_kind, new_uid)
 from .scheduler import SlotScheduler
 from .spmd_executor import SPMDFunctionExecutor
 from .store import StateStore
@@ -72,6 +73,8 @@ class Agent:
                  straggler_factor: float = 3.0,
                  straggler_min_samples: int = 5,
                  straggler_min_deadline: float = 0.1,
+                 straggler_stdev_k: float = 4.0,
+                 per_kind_deadlines: bool = True,
                  monitor_interval: float = 0.02,
                  poll_interval: Optional[float] = None,
                  ckpt_store: Optional[CheckpointStore] = None,
@@ -86,6 +89,8 @@ class Agent:
         self.straggler_factor = straggler_factor
         self.straggler_min_samples = straggler_min_samples
         self.straggler_min_deadline = straggler_min_deadline
+        self.straggler_stdev_k = straggler_stdev_k
+        self.per_kind_deadlines = per_kind_deadlines
         # poll_interval is accepted for backward compatibility; the loop is
         # event-driven, so it only scales the straggler-monitor cadence.
         self.monitor_interval = (poll_interval * 10 if poll_interval
@@ -124,6 +129,12 @@ class Agent:
                                     # tasks (O(1) steal/scaler metric —
                                     # PoolScaler ticks and steal sorting
                                     # read it instead of scanning the heap)
+        # per-app-kind splits of the two counters above: the cost-model
+        # layers (CostModelPolicy, Pilot.predicted_queue_wait) price a
+        # backlog as sum(slots_of_kind x predicted duration of kind), so
+        # the slot counts must be available by kind without heap scans
+        self._kind_demand: Dict[str, int] = {}
+        self._kind_queued: Dict[str, int] = {}
         self._sched_thread = threading.Thread(target=self._loop, daemon=True)
         self._mon_thread = threading.Thread(target=self._monitor, daemon=True)
         self._started = False
@@ -154,6 +165,8 @@ class Agent:
                 self._done_cb[task.uid] = done_cb
             self._outstanding += 1
             self._demand_slots += task.resources.slots
+            self._kadd(self._kind_demand, model_kind(task),
+                       task.resources.slots)
             # fast path: nothing waiting and slots available — allocate in
             # the submitting thread and hand straight to a worker, skipping
             # the scheduler-thread handoff (one fewer context switch on the
@@ -172,6 +185,8 @@ class Agent:
                            (-task.resources.priority, self._seq, task))
             self._seq += 1
             self._queued_slots += task.resources.slots
+            self._kadd(self._kind_queued, model_kind(task),
+                       task.resources.slots)
             self._dirty = True
             self._cv.notify_all()
             return True
@@ -203,6 +218,8 @@ class Agent:
                         self._done_cb[t.uid] = done_cb
                     self._outstanding += 1
                     self._demand_slots += t.resources.slots
+                    self._kadd(self._kind_demand, model_kind(t),
+                               t.resources.slots)
                     t.slot_ids = slots
                     t.transition(TaskState.SCHEDULED, self.store)
                     self._running[t.uid] = t
@@ -231,6 +248,9 @@ class Agent:
         self._outstanding += 1
         self._demand_slots += task.resources.slots
         self._queued_slots += task.resources.slots
+        kind = model_kind(task)
+        self._kadd(self._kind_demand, kind, task.resources.slots)
+        self._kadd(self._kind_queued, kind, task.resources.slots)
         self._dirty = True
 
     def shutdown(self, wait: bool = True, timeout: float = 60.0):
@@ -258,11 +278,36 @@ class Agent:
                     t.error = RuntimeError(f"slot failure on {slots}")
         return victims
 
+    @staticmethod
+    def _kadd(counts: Dict[str, int], kind: str, n: int):
+        """Caller holds self._cv.  Adjust a per-kind slot counter, dropping
+        zeroed entries so a long-lived agent never accretes dead kinds."""
+        new = counts.get(kind, 0) + n
+        if new > 0:
+            counts[kind] = new
+        else:
+            counts.pop(kind, None)
+
     def load(self) -> int:
         """Slot demand (queued + running) — the PilotPool routing metric.
         An O(1) counter read, maintained at submit/terminal transitions."""
         with self._cv:
             return self._demand_slots
+
+    def demand_by_kind(self) -> Dict[str, int]:
+        """Per-app-kind split of ``load()``: {kind: outstanding slots}.
+        O(#kinds) copy of incrementally maintained counters — the cost
+        model prices this backlog as sum(slots x predicted duration)."""
+        with self._cv:
+            return dict(self._kind_demand)
+
+    def queued_by_kind(self) -> Dict[str, int]:
+        """Per-app-kind split of ``queued_demand()`` (the stealable,
+        not-yet-dispatched backlog) — the PoolScaler's predictive wait
+        signal prices exactly this, since running tasks keep their slots
+        regardless of how many pilots exist."""
+        with self._cv:
+            return dict(self._kind_queued)
 
     def queued_demand(self) -> int:
         """Slots demanded by queued-but-not-dispatched tasks (the stealable
@@ -343,6 +388,9 @@ class Agent:
                     self._outstanding -= 1
                     self._demand_slots -= t.resources.slots
                     self._queued_slots -= t.resources.slots
+                    kind = model_kind(t)
+                    self._kadd(self._kind_demand, kind, -t.resources.slots)
+                    self._kadd(self._kind_queued, kind, -t.resources.slots)
                     continue
                 eligible = (t.replica_of is None
                             and (pred is None
@@ -357,6 +405,9 @@ class Agent:
                 self._outstanding -= 1
                 self._demand_slots -= t.resources.slots
                 self._queued_slots -= t.resources.slots
+                kind = model_kind(t)
+                self._kadd(self._kind_demand, kind, -t.resources.slots)
+                self._kadd(self._kind_queued, kind, -t.resources.slots)
             keep.sort()
             self._wait = keep                    # sorted list is a valid heap
             if self._outstanding == 0:
@@ -452,6 +503,9 @@ class Agent:
                     self._outstanding -= 1
                     self._demand_slots -= t.resources.slots
                     self._queued_slots -= t.resources.slots
+                    kind = model_kind(t)
+                    self._kadd(self._kind_demand, kind, -t.resources.slots)
+                    self._kadd(self._kind_queued, kind, -t.resources.slots)
                     if self._outstanding == 0:
                         self._cv.notify_all()
                     continue
@@ -461,6 +515,8 @@ class Agent:
                     continue
                 t.slot_ids = slots
                 self._queued_slots -= t.resources.slots
+                self._kadd(self._kind_queued, model_kind(t),
+                           -t.resources.slots)
                 t.transition(TaskState.SCHEDULED, self.store)
                 self._running[t.uid] = t
                 self._dispatch(t)
@@ -592,6 +648,8 @@ class Agent:
                                (-task.resources.priority, self._seq, task))
                 self._seq += 1
                 self._queued_slots += task.resources.slots
+                self._kadd(self._kind_queued, model_kind(task),
+                           task.resources.slots)
                 self._dirty = True
                 self._cv.notify_all()
             return
@@ -639,6 +697,8 @@ class Agent:
             with self._cv:
                 self._outstanding -= 1
                 self._demand_slots -= task.resources.slots
+                self._kadd(self._kind_demand, model_kind(task),
+                           -task.resources.slots)
                 if self._outstanding == 0:
                     self._cv.notify_all()
             return
@@ -651,6 +711,8 @@ class Agent:
                            (-task.resources.priority, self._seq, task))
             self._seq += 1
             self._queued_slots += task.resources.slots
+            self._kadd(self._kind_queued, model_kind(task),
+                       task.resources.slots)
             self._dirty = True
             self._cv.notify_all()
 
@@ -660,11 +722,30 @@ class Agent:
             self._replicated.discard(task.uid)
             self._outstanding -= 1
             self._demand_slots -= task.resources.slots
+            self._kadd(self._kind_demand, model_kind(task),
+                       -task.resources.slots)
             if self._outstanding == 0:
                 self._cv.notify_all()
 
     # ----------------------------- monitor ------------------------------ #
-    def _deadline(self) -> Optional[float]:
+    def _deadline(self, kind: Optional[str] = None) -> Optional[float]:
+        """Straggler deadline in seconds, or None while too cold to judge.
+
+        Per-kind first (the tentpole fix): with ``kind`` given and enough
+        samples in the store's duration model, the deadline is
+        ``max(floor, factor x mean, mean + k x stdev)`` of *that kind's*
+        population — so one fast kind's flood can no longer drag the
+        global p95 below a slow kind's normal runtime and spawn spurious
+        replicas (replica churn burns slots the cost model then
+        mis-reads).  Cold kinds — and ``per_kind_deadlines=False`` — fall
+        back to the original global recent-p95 x factor."""
+        if kind is not None and self.per_kind_deadlines:
+            stats = self.store.duration_stats(kind)
+            if stats is not None and stats[2] >= self.straggler_min_samples:
+                mean, var, _n = stats
+                return max(self.straggler_min_deadline,
+                           mean * self.straggler_factor,
+                           mean + self.straggler_stdev_k * var ** 0.5)
         with self._cv:
             if len(self._durations) < self.straggler_min_samples:
                 return None
@@ -686,21 +767,26 @@ class Agent:
         # stop-event wait, not a sleep: exits promptly on shutdown and never
         # touches the submit->schedule->complete path.
         while not self._stop.wait(self.monitor_interval):
-            dl = self._deadline()
-            if dl is None:
-                continue
             now = time.monotonic()
             with self._cv:
-                candidates = [
+                running = [
                     t for t in self._running.values()
                     if t.state == TaskState.RUNNING
                     and t.uid not in self._replicated
                     and t.replica_of is None
-                    and t.uid not in self._preempt_handoff
-                    and now - t.timestamps.get("RUNNING", now) > dl
-                    and self.scheduler.n_free >= t.resources.slots]
-            for t in candidates:
-                self._spawn_replica(t)
+                    and t.uid not in self._preempt_handoff]
+            # one deadline per kind per tick (duration-model read, outside
+            # the cv): each task is judged against its own population
+            dl_by_kind: Dict[str, Optional[float]] = {}
+            for t in running:
+                kind = model_kind(t)
+                if kind not in dl_by_kind:
+                    dl_by_kind[kind] = self._deadline(kind)
+                dl = dl_by_kind[kind]
+                if (dl is not None
+                        and now - t.timestamps.get("RUNNING", now) > dl
+                        and self.scheduler.n_free >= t.resources.slots):
+                    self._spawn_replica(t)
 
     def _spawn_replica(self, t: TaskRecord) -> TaskRecord:
         """Submit a straggler replica of a RUNNING task.  The record

@@ -42,6 +42,13 @@ def new_uid(prefix: str = "task") -> str:
     return f"{prefix}.{next(_uid):06d}"
 
 
+def model_kind(task: "TaskRecord") -> str:
+    """The duration-model population a task belongs to: the pre-translation
+    app kind when one exists (bash apps *execute* as kind "python" but
+    their run times are a bash population), else the execution kind."""
+    return task.app_kind or task.kind
+
+
 @dataclass
 class ResourceSpec:
     """Per-task resource requirements (the RP task-description fields Parsl

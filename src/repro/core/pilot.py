@@ -61,6 +61,12 @@ class PilotDescription:
     cache_executables: bool = True
     backfill_window: int = 16
     straggler_factor: float = 3.0
+    straggler_stdev_k: float = 4.0    # per-kind deadline spread multiplier:
+                                      # deadline = max(floor, factor*mean,
+                                      # mean + k*stdev) of the kind's EWMAs
+    per_kind_deadlines: bool = True   # False = PR-6 global-p95 deadlines
+                                      # (the knob the mixed-kind straggler
+                                      # regression test pins the bug with)
     kinds: Optional[Tuple[str, ...]] = None  # accepted task/resource kinds
                                              # (e.g. ("python", "bash") or
                                              # ("spmd",)); None = accept all
@@ -89,6 +95,8 @@ class Pilot:
                            max_workers=desc.max_workers,
                            backfill_window=desc.backfill_window,
                            straggler_factor=desc.straggler_factor,
+                           straggler_stdev_k=desc.straggler_stdev_k,
+                           per_kind_deadlines=desc.per_kind_deadlines,
                            ckpt_store=self.ckpt,
                            transport=make_transport(
                                desc.transport, desc.max_workers,
@@ -118,6 +126,24 @@ class Pilot:
         """Demanded slots (queued + running) / capacity — the least-loaded
         routing metric."""
         return self.agent.load() / max(1, self.scheduler.capacity)
+
+    def predicted_queue_wait(self) -> float:
+        """Predicted seconds to absorb the *queued* backlog: each queued
+        kind's slots priced at the duration model's EWMA mean for that
+        kind (pilot-mixture fallback), spread over capacity.  0.0 with an
+        empty queue — and 0.0 for kinds the model has never seen, so a
+        cold pilot contributes nothing and the PoolScaler's observed-wait
+        signal remains the effective floor."""
+        queued = self.agent.queued_by_kind()
+        if not queued:
+            return 0.0
+        total = 0.0
+        for kind, slots in queued.items():
+            st = (self.store.duration_stats(kind)
+                  or self.store.duration_stats(None))
+            if st is not None:
+                total += slots * st[0]
+        return total / max(1, self.scheduler.capacity)
 
     # elastic scaling --------------------------------------------------- #
     def grow(self, n_slots: int):
@@ -504,13 +530,25 @@ class PilotPool:
         return moved
 
     # ------------------------- elastic membership ------------------------ #
-    def add_pilot(self, desc: PilotDescription) -> Pilot:
-        """Spawn a pilot into the live pool (records PILOT_START)."""
+    def add_pilot(self, desc: PilotDescription,
+                  seed_durations: bool = True) -> Pilot:
+        """Spawn a pilot into the live pool (records PILOT_START).
+
+        The newcomer's duration model is seeded cross-pilot by kind from
+        its siblings' observations (n-weighted merge), so an elastically
+        spawned pilot makes cost-model decisions — placement pricing,
+        per-kind straggler deadlines, predictive scaling — from its first
+        task instead of re-learning what the fleet already measured."""
         with self._lock:
             if self._closed:
                 raise RuntimeError("pool is closed")
+            siblings = list(self.pilots)
             p = Pilot(desc)
             self.pilots.append(p)
+        if seed_durations:
+            for s in siblings:
+                for kind, (mean, var, n) in s.store.duration_model().items():
+                    p.store.seed_durations(kind, mean, var, n)
         self._wire(p)
         return p
 
@@ -593,8 +631,16 @@ class ScalerConfig:
                         most starving queued demand (None = [template])
     min_pilots        — never retire below this many pilots
     max_pilots        — never spawn beyond this many pilots
-    scale_up_wait_s   — spawn when the oldest queued task has waited this
-                        long without being scheduled
+    scale_up_wait_s   — spawn when the queue-wait signal exceeds this:
+                        the *predicted* wait to absorb a pilot's queued
+                        backlog (duration model, see docs/scheduling.md)
+                        or the observed wait of its oldest queued task,
+                        whichever is larger — so a long queue of slow
+                        work triggers the spawn the moment it is priced,
+                        not after the threshold has already been wasted
+    predictive        — False restores the pure observed-wait signal
+                        (PR-6 behavior); the duration model is then
+                        ignored by scaling decisions
     scale_down_idle_s — retire a pilot idle (no running or queued work)
                         for this long
     spawn_cooldown_s  — minimum time between spawns, so one long queue
@@ -610,6 +656,7 @@ class ScalerConfig:
     min_pilots: int = 1
     max_pilots: int = 4
     scale_up_wait_s: float = 0.25
+    predictive: bool = True
     scale_down_idle_s: float = 1.0
     spawn_cooldown_s: float = 0.5
     interval_s: float = 0.05
@@ -675,11 +722,16 @@ class PoolScaler:
         now = time.monotonic()      # than spawning a pilot
         pilots = self.pool.active()
 
-        # scale up: the oldest queued task has waited past the threshold
-        # even after rebalancing, so no existing pilot can absorb it soon.
-        # Which template spawns is a placement decision: the policy picks
-        # the one whose kinds cover the most starving queued demand.
-        wait = max((p.agent.oldest_queued_wait(now) for p in pilots),
+        # scale up: the queue-wait signal passed the threshold even after
+        # rebalancing, so no existing pilot can absorb the backlog soon.
+        # The signal is *predicted* wait (queued slots priced by the
+        # duration model) — a 50-task queue of known-slow work trips the
+        # threshold immediately instead of after scale_up_wait_s of
+        # already-wasted waiting — floored by the observed wait of the
+        # oldest queued task, which covers cold models.  Which template
+        # spawns is a placement decision: the policy picks the one whose
+        # kinds cover the most starving queued demand.
+        wait = max((self._wait_signal(p, now) for p in pilots),
                    default=0.0)
         if (wait > self.cfg.scale_up_wait_s
                 and len(pilots) < self.cfg.max_pilots
@@ -714,6 +766,13 @@ class PoolScaler:
                     self._idle_since.pop(p.uid, None)
                     self.decisions.append({"action": "retire",
                                            "pilot": p.uid, "t": now})
+
+    def _wait_signal(self, p: Pilot, now: float) -> float:
+        """Scale-up pressure from one pilot, in seconds of queue wait."""
+        observed = p.agent.oldest_queued_wait(now)
+        if not self.cfg.predictive:
+            return observed
+        return max(observed, p.predicted_queue_wait())
 
     def _spawn_desc(self, template: Optional[PilotDescription] = None
                     ) -> PilotDescription:

@@ -19,7 +19,7 @@ all four decisions behind one protocol so policy and mechanism separate
   ``pick_template(...)``        — choose the scale-up template for the
                                   kinds that are actually starving
 
-Two built-in policies:
+Three built-in policies:
 
   * ``LeastLoaded`` — PR-2 behavior, byte-for-byte: min demanded-slots /
     capacity, first-of-equals, most-loaded victim, steal anything
@@ -32,6 +32,11 @@ Two built-in policies:
     locality weight; stealing only migrates an affine task when the
     victim's backlog (imbalance) beats the affinity penalty — the soft
     sibling of the hard ``sticky`` stamp, which still pins absolutely.
+  * ``CostModelPolicy`` — schedules on *predicted seconds*, not counted
+    slots: wraps either of the above and re-prices placement, stealing,
+    preemption, and victim ordering with the StateStore's per-(app_kind,
+    pilot) duration model.  See the class docstring and
+    docs/scheduling.md.
 
 Tie-breaking composes: any policy takes a sequence of ``tie_break``
 callables ``(task, pilot) -> float`` (lower preferred) applied in order
@@ -255,6 +260,218 @@ class LocalityAware(PlacementPolicy):
         return super().pick_preempt(thief, eligible, loads)
 
 
+class CostModelPolicy(PlacementPolicy):
+    """Cost-model scheduling: every decision is priced in *predicted
+    seconds* from the StateStore duration model instead of counted slots
+    (see docs/scheduling.md).
+
+    Wraps an inner policy (``LeastLoaded`` by default, or
+    ``LocalityAware`` to keep data-affinity) and re-expresses its
+    decisions in time:
+
+      * ``place``/``place_bulk`` rank pilots by predicted completion:
+        backlog seconds (per-kind queued+running slots x that kind's EWMA
+        mean run time / capacity) plus the task's own predicted run time
+        on that pilot, minus the affinity bonus converted to seconds.
+      * ``steal_eligible`` compares the predicted wait a migration saves
+        (victim backlog-per-slot x the victim's mixture mean) against the
+        affinity penalty in seconds.
+      * ``pick_preempt`` ranks victims by predicted *remaining* work
+        (kind mean - observed run time), so the task that is nearly done
+        stops being the default preemption victim; the checkpoint trail
+        breaks ties (fewer saved steps = less banked progress).
+      * ``pick_victim`` orders steal victims by queued backlog seconds,
+        not queued slot counts.
+
+    Predictions fall back per (pilot, kind): the pilot's own kind EWMA ->
+    the candidate fleet's kind aggregate -> the pilot's all-kind mixture
+    -> the fleet mixture -> ``default_duration_s``.  With a completely
+    cold model every candidate prices at the constant default, and the
+    ranking degenerates exactly to the inner policy's count-based order —
+    cold starts schedule like PR-2, warm models schedule on time."""
+
+    name = "cost"
+
+    def __init__(self, inner: Union[None, str, PlacementPolicy] = None,
+                 default_duration_s: float = 1.0,
+                 tie_breaks: Sequence[TieBreak] = ()):
+        super().__init__(tie_breaks=tie_breaks)
+        self.inner = resolve_policy(inner)
+        if isinstance(self.inner, CostModelPolicy):
+            raise ValueError("CostModelPolicy cannot wrap itself")
+        if default_duration_s <= 0:
+            raise ValueError("default_duration_s must be > 0, "
+                             f"got {default_duration_s}")
+        self.default_duration_s = default_duration_s
+
+    # --------------------------- predictions --------------------------- #
+    def _fleet_model(self, pilots) -> Tuple[Dict[str, float],
+                                            Optional[float]]:
+        """({kind: n-weighted mean across the candidate pilots}, fleet
+        mixture mean or None) — the cross-pilot fallback for kinds an
+        individual pilot has not run yet."""
+        agg: Dict[str, List[float]] = {}
+        for p in pilots:
+            for kind, (mean, _var, n) in p.store.duration_model().items():
+                m = agg.setdefault(kind, [0.0, 0])
+                tot = m[1] + n
+                m[0] = (m[0] * m[1] + mean * n) / tot
+                m[1] = tot
+        n_all = sum(m[1] for m in agg.values())
+        overall = (sum(m[0] * m[1] for m in agg.values()) / n_all
+                   if n_all else None)
+        return {k: m[0] for k, m in agg.items()}, overall
+
+    def _run_mean(self, pilot, kind: Optional[str], fleet) -> float:
+        """Predicted run time (seconds) of one ``kind`` task on ``pilot``,
+        falling back pilot-kind -> fleet-kind -> pilot mixture -> fleet
+        mixture -> the constant default (cold start)."""
+        if kind is not None:
+            st = pilot.store.duration_stats(kind)
+            if st is not None:
+                return st[0]
+            if kind in fleet[0]:
+                return fleet[0][kind]
+        st = pilot.store.duration_stats(None)
+        if st is not None:
+            return st[0]
+        if fleet[1] is not None:
+            return fleet[1]
+        return self.default_duration_s
+
+    def _backlog_seconds(self, pilot, fleet) -> float:
+        """Predicted seconds of queue wait a new arrival sees: each
+        outstanding kind's slots priced at its predicted duration, spread
+        over the pilot's capacity."""
+        cap = max(1, pilot.scheduler.capacity)
+        return sum(slots * self._run_mean(pilot, k, fleet)
+                   for k, slots in pilot.agent.demand_by_kind().items()
+                   ) / cap
+
+    def _mixture_mean(self, pilot, fleet) -> float:
+        """Demand-weighted mean duration of the pilot's current backlog —
+        the seconds one load unit (slot per slot of capacity) stands for
+        when converting count-based currencies."""
+        by_kind = pilot.agent.demand_by_kind()
+        tot = sum(by_kind.values())
+        if tot:
+            return sum(s * self._run_mean(pilot, k, fleet)
+                       for k, s in by_kind.items()) / tot
+        return self._run_mean(pilot, None, fleet)
+
+    # ------------------------------ placing ----------------------------- #
+    def place(self, task, pilots, loads=None, extra_s=None):
+        from .futures import model_kind
+        pilots = list(pilots)
+        fleet = self._fleet_model(pilots)
+        kind = model_kind(task)
+        locality = (self.inner.locality_weight
+                    if isinstance(self.inner, LocalityAware) else 0.0)
+        best, best_key = None, None
+        for p in pilots:
+            run = self._run_mean(p, kind, fleet)
+            eta = self._backlog_seconds(p, fleet) + run
+            if extra_s is not None:
+                eta += extra_s.get(p.uid, 0.0)
+            elif loads is not None:
+                # a generic caller's batch estimate arrives in load
+                # units; price the delta over live load at the pilot's
+                # mixture rate
+                delta = loads[p.uid] - p.load()
+                if delta > 0:
+                    eta += delta * self._mixture_mean(p, fleet)
+            if locality:
+                # affinity bonus in seconds: the inner weight is load
+                # units, one unit of this task is worth its run time
+                eta -= locality * run * affinity_match(task, p)
+            key = (eta, *(tb(task, p) for tb in self.tie_breaks))
+            if best is None or key < best_key:
+                best, best_key = p, key
+        return best
+
+    def place_bulk(self, items, loads, caps):
+        from .futures import model_kind
+        out: List[Union["Pilot", Exception]] = []
+        extra_s: Dict[str, float] = {}      # seconds this batch already
+        for task, cands in items:           # queued onto each pilot
+            if isinstance(cands, Exception):
+                out.append(cands)
+                continue
+            p = self.place(task, cands, extra_s=extra_s)
+            loads[p.uid] += task.resources.slots / caps[p.uid]
+            fleet = self._fleet_model([p])
+            extra_s[p.uid] = (extra_s.get(p.uid, 0.0)
+                              + task.resources.slots
+                              * self._run_mean(p, model_kind(task), fleet)
+                              / caps[p.uid])
+            out.append(p)
+        return out
+
+    # ------------------------------ stealing ---------------------------- #
+    def pick_victim(self, thief, pilots, demand):
+        """Most predicted-seconds of queued backlog first — a victim with
+        few but long queued tasks outranks one with many short ones."""
+        pilots = list(pilots)
+        fleet = self._fleet_model(pilots + [thief])
+        return sorted(
+            pilots,
+            key=lambda p: demand.get(p.uid, 0) * self._mixture_mean(p,
+                                                                    fleet),
+            reverse=True)
+
+    def steal_eligible(self, task, thief, victim, imbalance):
+        """Predicted wait saved vs the affinity penalty, both in seconds.
+        ``imbalance`` (victim queued slots per slot of capacity) x the
+        victim's mixture mean is the wait the move saves; a LocalityAware
+        inner's penalty is its weight x the task's predicted run time x
+        the affinity lost by moving."""
+        from .futures import model_kind
+        fleet = self._fleet_model([thief, victim])
+        if not isinstance(self.inner, LocalityAware):
+            return self.inner.steal_eligible(task, thief, victim,
+                                             imbalance)
+        penalty_s = (self.inner.locality_weight
+                     * self._run_mean(victim, model_kind(task), fleet)
+                     * (affinity_match(task, victim)
+                        - affinity_match(task, thief)))
+        saved_s = imbalance * self._mixture_mean(victim, fleet)
+        return penalty_s <= 0 or saved_s > penalty_s
+
+    # ----------------------------- preemption --------------------------- #
+    def pick_preempt(self, thief, candidates, loads):
+        """Rank victims by predicted *remaining* work, descending: the
+        kind's EWMA mean minus the observed run time so far.  The default
+        policy's longest-running-first rule preempts exactly the task
+        that is about to finish — maximum migration overhead per second
+        of remaining work; pricing the remainder inverts that.  Ties
+        break on the checkpoint trail (fewer saved steps = less banked
+        progress = preempt first), then the victim's queued backlog.  A
+        LocalityAware inner's affinity gate applies first, in seconds."""
+        import time as _time
+        from .futures import model_kind
+        if isinstance(self.inner, LocalityAware):
+            candidates = [(t, v) for t, v in candidates
+                          if self.steal_eligible(t, thief, v,
+                                                 loads.get(v.uid, 0.0))]
+        candidates = list(candidates)
+        fleet = self._fleet_model([v for _, v in candidates] + [thief])
+        now = _time.monotonic()
+        best, best_key = None, None
+        for t, v in candidates:
+            elapsed = max(0.0, now - t.timestamps.get("RUNNING", now))
+            remaining = self._run_mean(v, model_kind(t), fleet) - elapsed
+            step = v.ckpt.step(t.ckpt_key or t.uid)
+            key = (-remaining, step if step is not None else -1,
+                   -loads.get(v.uid, 0.0))
+            if best is None or key < best_key:
+                best, best_key = (t, v), key
+        return best
+
+    # ------------------------------ scaling ----------------------------- #
+    def pick_template(self, starving_kinds, templates):
+        return self.inner.pick_template(starving_kinds, templates)
+
+
 _POLICIES = {
     "least-loaded": LeastLoaded,
     "least_loaded": LeastLoaded,
@@ -262,6 +479,10 @@ _POLICIES = {
     "locality": LocalityAware,
     "locality-aware": LocalityAware,
     "locality_aware": LocalityAware,
+    "cost": CostModelPolicy,
+    "cost-model": CostModelPolicy,
+    "cost_model": CostModelPolicy,
+    "costmodel": CostModelPolicy,
 }
 
 

@@ -22,12 +22,18 @@ thread pool — e.g. a proc CPU pilot for compute-heavy python tasks next
 to an inproc device pilot for SPMD tasks, in one pool.
 
 Placement is configured with the ``placement=`` kwarg: a policy name
-(``"least-loaded"`` — the default — or ``"locality"``) or any
+(``"least-loaded"`` — the default — ``"locality"``, or ``"cost"``) or any
 ``repro.core.placement.PlacementPolicy`` instance, e.g.
-``RPEXExecutor(descs, placement=LocalityAware(locality_weight=0.75))``.
-The policy decides routing, bulk spreading, steal-victim ordering,
-per-task steal eligibility, and which scaler template spawns — see
-docs/placement.md.
+``RPEXExecutor(descs, placement=LocalityAware(locality_weight=0.75))`` or
+``placement=CostModelPolicy(inner="locality")``.  The policy decides
+routing, bulk spreading, steal-victim ordering, per-task steal
+eligibility, preemption-victim choice, and which scaler template spawns —
+see docs/placement.md.  ``"cost"`` re-prices all of those in predicted
+seconds from the per-(app_kind, pilot) duration model each pilot's
+StateStore maintains (docs/scheduling.md); the same model drives the
+agents' per-kind straggler deadlines and — with a ``ScalerConfig`` — the
+PoolScaler's predictive scale-up signal, whichever placement policy is
+active.
 """
 from __future__ import annotations
 

@@ -39,6 +39,11 @@ Since PR 3 the store is an *off-critical-path* subsystem:
     Replay ingests tail events into the timeline only — their aggregate
     contribution already lives in the stats header, so counters never
     double-count.
+  * A per-(app_kind, pilot) duration model rides the same incremental
+    path: EWMA mean/variance of observed DONE run times folded in
+    ``_ingest``, snapshotted into the compaction stats header, rebuilt on
+    replay, and seedable cross-pilot by kind — the signal every
+    cost-model scheduling decision reads (see docs/scheduling.md).
   * Restart rebuilds the event stream: every journal line carries a
     monotonic timestamp (``mt``), so ``_replay`` reconstructs the STATE
     events (and replays journaled runtime events) instead of dropping
@@ -72,7 +77,8 @@ class StateStore:
                  max_queue: int = 8192,
                  compact_min_lines: int = 4096,
                  compact_factor: int = 4,
-                 compact_tail_events: int = 256):
+                 compact_tail_events: int = 256,
+                 dur_alpha: float = 0.2):
         self.journal_path = Path(journal_path) if journal_path else None
         self._lock = threading.Lock()
         self.tasks: Dict[str, dict] = {}
@@ -101,6 +107,13 @@ class StateStore:
         self._oh_seeded = 0.0               # pre-compaction overhead whose
                                             # intervals were snapshotted away
         self._oh_ivals: List[Tuple[float, float]] = []  # for cross-pilot union
+        # ---- duration model (cost-model scheduling, see docs/scheduling.md)
+        # kind -> [ewma_mean_s, ewma_var_s2, n_samples] of observed DONE run
+        # times; folded in _ingest like the other counters, snapshotted into
+        # the compaction stats header, and seedable cross-pilot by kind.
+        self._dur: Dict[str, List[float]] = {}
+        self._dur_open: Dict[str, float] = {}   # uid -> latest RUNNING t
+        self._dur_alpha = dur_alpha
 
         # ---- write-behind journal ----
         self._fh = None
@@ -189,7 +202,8 @@ class StateStore:
                     ev = {"event": "STATE", "uid": rec["uid"],
                           "state": rec["state"], "t": mt,
                           "slots": len(rec.get("slot_ids") or ()) or 1,
-                          "pilot": rec.get("pilot")}
+                          "pilot": rec.get("pilot"),
+                          "kind": rec.get("akind") or rec.get("kind")}
                     self.events.append(ev)
                     self._ingest(ev)
 
@@ -199,6 +213,8 @@ class StateStore:
             if k in self._occ:
                 self._occ[k] += float(v)
         self._oh_seeded += float(stats.get("oh_total", 0.0))
+        for kind, (mean, var, n) in (stats.get("dur") or {}).items():
+            self._dur_merge(kind, mean, var, n)
         for bound, pick in (("t_min", min), ("t_max", max)):
             v = stats.get(bound)
             if v is not None:
@@ -249,6 +265,10 @@ class StateStore:
         }
         if task.pilot_uid is not None:
             rec["pilot"] = task.pilot_uid
+        if task.app_kind and task.app_kind != task.kind:
+            # the duration model keys on the *app* kind (bash apps execute
+            # as kind "python" but their run times are a bash population)
+            rec["akind"] = task.app_kind
         if task.state == TaskState.DONE:
             # journaled: jsonability is checked by the writer thread (the
             # dumps is the expensive part) which also unpins the result
@@ -264,6 +284,7 @@ class StateStore:
             "state": task.state.value, "t": rec["mt"],
             "slots": len(task.slot_ids) or 1,
             "pilot": task.pilot_uid,
+            "kind": task.app_kind or task.kind,
         }
         with self._lock:
             prev = self.tasks.get(task.uid)
@@ -339,6 +360,15 @@ class StateStore:
             self._ended.add(uid)
             if "RUNNING" in ts:
                 self._occ["Running"] += n * max(0.0, t - ts["RUNNING"])
+        # duration model: one sample per successful completion, measured
+        # from the *latest* RUNNING stamp (a retried task's requeue wait
+        # must not inflate its run time).  FAILED/CANCELED leave no sample.
+        if state == "RUNNING":
+            self._dur_open[uid] = t
+        elif state in _END_STATES:
+            start = self._dur_open.pop(uid, None)
+            if state == "DONE" and start is not None:
+                self._dur_update(ev.get("kind") or "?", max(0.0, t - start))
         # streaming overhead union (see overhead())
         if state == "SCHEDULED":
             if uid not in self._oh_opens:
@@ -427,6 +457,76 @@ class StateStore:
         them from O(events) stream records."""
         with self._lock:
             return list(self._oh_ivals)
+
+    # --------------------------- duration model -------------------------- #
+    def _dur_update(self, kind: str, x: float):
+        """Caller holds self._lock.  Fold one observed run time (seconds)
+        into the per-kind EWMA mean/variance — West's exponentially
+        weighted recurrence, so stale history decays instead of pinning
+        the mean forever like a plain average would."""
+        m = self._dur.get(kind)
+        if m is None:
+            self._dur[kind] = [x, 0.0, 1]
+            return
+        a = self._dur_alpha
+        d = x - m[0]
+        incr = a * d
+        m[0] += incr
+        m[1] = (1.0 - a) * (m[1] + d * incr)
+        m[2] += 1
+
+    def _dur_merge(self, kind: str, mean: float, var: float, n: int):
+        """Caller holds self._lock (or is single-threaded replay).  Merge
+        an external (mean, var, n) summary — compaction-header seeding and
+        cross-pilot seeding both land here.  n-weighted moment pooling:
+        the combined variance keeps the between-source spread."""
+        n = int(n)
+        if n <= 0:
+            return
+        cur = self._dur.get(kind)
+        if cur is None or cur[2] <= 0:
+            self._dur[kind] = [float(mean), float(var), n]
+            return
+        n0 = cur[2]
+        tot = n0 + n
+        mu = (cur[0] * n0 + float(mean) * n) / tot
+        cur[1] = (n0 * (cur[1] + (cur[0] - mu) ** 2)
+                  + n * (float(var) + (float(mean) - mu) ** 2)) / tot
+        cur[0] = mu
+        cur[2] = tot
+
+    def duration_stats(
+            self, kind: Optional[str] = None
+    ) -> Optional[Tuple[float, float, int]]:
+        """(ewma_mean_s, ewma_var_s2, n_samples) of observed run times for
+        one app kind — or, with ``kind=None``, the n-weighted pool across
+        every kind this store has seen (the pilot-level mixture estimate).
+        None when there are no samples yet (cold start): callers must fall
+        back, never invent a duration."""
+        with self._lock:
+            if kind is not None:
+                m = self._dur.get(kind)
+                return (m[0], m[1], m[2]) if m else None
+            if not self._dur:
+                return None
+            n = sum(m[2] for m in self._dur.values())
+            mean = sum(m[0] * m[2] for m in self._dur.values()) / n
+            var = sum(m[2] * (m[1] + (m[0] - mean) ** 2)
+                      for m in self._dur.values()) / n
+            return (mean, var, n)
+
+    def duration_model(self) -> Dict[str, Tuple[float, float, int]]:
+        """Snapshot of the whole model, {kind: (mean, var, n)} — the
+        cross-pilot seeding source (PilotPool.add_pilot)."""
+        with self._lock:
+            return {k: (m[0], m[1], m[2]) for k, m in self._dur.items()}
+
+    def seed_durations(self, kind: str, mean: float, var: float, n: int):
+        """Seed the model for a kind from another pilot's observations —
+        a freshly spawned pilot starts warm instead of falling back to
+        count-based decisions until it has its own history."""
+        with self._lock:
+            self._dur_merge(kind, mean, var, n)
 
     # --------------------------- write-behind ---------------------------- #
     def _wake_writer(self):
@@ -598,7 +698,8 @@ class StateStore:
             stats = {"occ": dict(self._occ),
                      "oh_total": (self._oh_seeded + self._oh_total
                                   + self._oh_cur),
-                     "t_min": self._t_min, "t_max": self._t_max}
+                     "t_min": self._t_min, "t_max": self._t_max,
+                     "dur": {k: list(v) for k, v in self._dur.items()}}
         tmp = self.journal_path.with_name(self.journal_path.name
                                           + ".compact.tmp")
         with open(tmp, "w") as out:

@@ -92,6 +92,9 @@ class _PoolBase:
         self._threads: set = set()
         self._ready = 0                 # dispatched, not yet claimed
         self._executing = 0             # claimed, still running
+        self._closed = False            # set by shutdown(); later dispatch
+                                        # raises instead of stranding the
+                                        # task behind a leftover poison pill
 
     # ------------------------------ protocol ----------------------------- #
     def start(self, run_cb: Callable, executor) -> "_PoolBase":
@@ -106,6 +109,11 @@ class _PoolBase:
         covers all claimed work (executing + undispatched), so tasks
         scheduled in one pass run concurrently."""
         with self._lock:
+            if self._closed:
+                # a post-shutdown dispatch would race the poison pills: a
+                # freshly-spawned thread can consume a leftover sentinel
+                # and retire, stranding the task in the queue forever
+                raise RuntimeError("transport pool is shut down")
             self._ready += 1
             want = self._executing + self._ready
             if len(self._threads) < min(self.max_workers, want):
@@ -119,7 +127,8 @@ class _PoolBase:
 
     def shutdown(self):
         with self._lock:
-            n = len(self._threads)
+            self._closed = True         # reject future dispatches before
+            n = len(self._threads)      # any pill can hit the queue
         for _ in range(n):              # one poison pill per live thread;
             self._q.put(_SENTINEL)      # a racing self-reap leaves a spare
                                         # pill in the queue, harmlessly

@@ -1,5 +1,6 @@
 """Optimizer, data pipeline, checkpointing, partition rules, MoE dispatch."""
 import os
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -108,6 +109,29 @@ def test_checkpoint_roundtrip_bf16(tmp_path):
     np.testing.assert_array_equal(np.asarray(out["a"], np.float32),
                                   np.asarray(tree["a"], np.float32))
     np.testing.assert_array_equal(out["b"]["c"], tree["b"]["c"])
+
+
+def test_checkpoint_float64_host_leaf_keeps_dtype(tmp_path):
+    """Regression: a float64 host-side leaf used to be routed through
+    jnp.asarray, which truncates to float32 under default x32 (with a
+    UserWarning); host leaves must round-trip through numpy exactly."""
+    ck = Checkpointer(str(tmp_path))
+    tree = {"host": np.linspace(0, 1, 7, dtype=np.float64),
+            "scalar": np.float64(2.5),
+            "dev": jnp.arange(4, dtype=jnp.float32)}
+    ck.save(3, tree)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", UserWarning)   # truncation warns
+        step, out = ck.restore(tree)
+    assert step == 3
+    assert out["host"].dtype == np.float64
+    assert isinstance(out["host"], np.ndarray)
+    assert not isinstance(out["host"], jax.Array)
+    np.testing.assert_array_equal(out["host"], tree["host"])
+    assert np.asarray(out["scalar"]).dtype == np.float64
+    assert float(out["scalar"]) == 2.5
+    assert out["dev"].dtype == jnp.float32            # device leaf intact
+    np.testing.assert_array_equal(out["dev"], tree["dev"])
 
 
 def test_checkpoint_gc_and_latest(tmp_path):

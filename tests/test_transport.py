@@ -193,6 +193,30 @@ def test_reaped_pool_still_drains_new_work():
     tr.shutdown()
 
 
+@pytest.mark.timeout(60)
+def test_dispatch_after_shutdown_raises_instead_of_stranding():
+    """Regression: a dispatch racing shutdown() could spawn a fresh
+    thread that consumed a leftover poison pill and retired, leaving the
+    task in the queue forever with no thread to drain it.  A closed pool
+    must refuse loudly instead."""
+    tr = InprocTransport(max_workers=4, idle_s=30.0)
+    ran = []
+    tr.start(lambda item: ran.append(item), executor=None)
+    tr.dispatch("before")
+    deadline = time.monotonic() + 5
+    while "before" not in ran and time.monotonic() < deadline:
+        time.sleep(0.02)
+    assert "before" in ran
+    tr.shutdown()
+    with pytest.raises(RuntimeError, match="shut down"):
+        tr.dispatch("stranded")
+    assert ran == ["before"]             # nothing silently swallowed
+    # shutdown is idempotent and the refusal persists
+    tr.shutdown()
+    with pytest.raises(RuntimeError, match="shut down"):
+        tr.dispatch("still-stranded")
+
+
 # ------------------------------ proc mode -------------------------------- #
 
 def _proc_rpex(**kw):
