@@ -1,0 +1,242 @@
+"""Experiment 10: resilience under a chaos storm — makespan degradation
+and exactly-once completion with pilot failure domains active.
+
+Two runs of the same workload over a 3-pilot pool (two inproc, one proc
+so worker kills have a target), heartbeat supervision on, PoolScaler
+replace-on-loss armed:
+
+  * baseline — fault free;
+  * chaos    — a pilot crash pinned to the pilot holding a RUNNING
+    checkpointable task (guaranteeing a checkpoint re-adoption), plus a
+    seeded storm of worker kills and slot failures.
+
+The workload mixes long checkpointable step tasks with a burst of short
+python tasks, all carrying a RetryPolicy (backoff + retry-on-a-
+different-pilot for infra failures).  Hard gates on the chaos run:
+
+  * every task completes DONE, exactly once;
+  * a PILOT_LOST event is journaled and its work re-routes
+    (STOLEN reason="pilot-lost");
+  * at least one checkpointable task resumes at step > 0 on a survivor;
+  * the scaler replaces the lost pilot (a ``replace_lost`` decision).
+
+The soft gate is graceful degradation: chaos makespan / baseline
+makespan must stay <= --max-degradation-ratio (0 = report only; CI
+passes a finite bound).  Emits ``BENCH_resilience.json`` at the repo
+root.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+import time
+from pathlib import Path
+
+from repro.core import (FaultInjector, PilotDescription, PilotPool,
+                        PoolScaler, ResourceSpec, RetryPolicy, ScalerConfig,
+                        TaskManager, TaskState, translate)
+
+
+def _ckpt_body(n, step_s, ckpt=None):
+    start = 0
+    got = ckpt.restore()
+    if got is not None:
+        start = got[0] + 1
+    for step in range(start, n):
+        time.sleep(step_s)
+        ckpt.save(step, step)
+    return {"start": start}
+
+
+def run_workload(chaos: bool, n_tasks: int, task_ms: float, ckpt_tasks: int,
+                 ckpt_steps: int, step_ms: float, seed: int,
+                 storm_s: float, worker_kills: int,
+                 slot_failures: int) -> dict:
+    pool = PilotPool(
+        [PilotDescription(n_slots=4, name="r0", straggler_factor=1e9),
+         PilotDescription(n_slots=4, name="r1", straggler_factor=1e9),
+         PilotDescription(n_slots=4, name="r2", straggler_factor=1e9,
+                          transport="proc")],
+        heartbeat_timeout_s=0.8)
+    scaler = PoolScaler(pool, ScalerConfig(
+        template=PilotDescription(n_slots=4, name="spare",
+                                  straggler_factor=1e9),
+        min_pilots=3, max_pilots=4, interval_s=0.05,
+        scale_up_wait_s=1e9, scale_down_idle_s=1e9)).start()
+    tmgr = TaskManager(pool)
+    inj = FaultInjector(pool, seed=seed)
+    try:
+        pol = RetryPolicy(max_retries=8, backoff_base_s=0.02,
+                          backoff_max_s=0.2, quarantine_after=None)
+        done_lock = threading.Lock()
+        completions = []   # (uid, state, record) — a task recovered from a
+                           # LOST pilot completes as a same-uid clone, so
+                           # results must be read here, not off the object
+                           # originally submitted
+        def cb(rec):
+            with done_lock:
+                completions.append((rec.uid, rec.state, rec))
+
+        t0 = time.monotonic()
+        ckpts = [translate(_ckpt_body, (ckpt_steps, step_ms / 1000.0), {},
+                           ResourceSpec(checkpointable=True),
+                           retry_policy=pol)
+                 for _ in range(ckpt_tasks)]
+        tmgr.submit_bulk(ckpts, done_cb=cb)
+
+        if chaos:
+            # pin the crash to a pilot that provably holds a RUNNING
+            # checkpointable task with a durable step — the re-adoption
+            # path is then exercised every run, not only on lucky seeds
+            victim = None
+            deadline = time.monotonic() + 15
+            while victim is None and time.monotonic() < deadline:
+                for t in ckpts:
+                    p = pool.by_uid(t.pilot_uid)
+                    if (p is not None and p in pool.active()
+                            and p.ckpt.step(t.ckpt_key) is not None):
+                        victim = p
+                        break
+                time.sleep(0.01)
+            assert victim is not None, "no checkpoint ever saved"
+            inj.add_pilot_crash(0.05, pilot=victim)
+            inj.storm(duration_s=storm_s, pilot_crashes=0,
+                      worker_kills=worker_kills,
+                      slot_failures=slot_failures, warmup_s=0.2)
+            inj.start()
+
+        burst = [translate(lambda i=i: time.sleep(task_ms / 1000.0) or i,
+                           (), {}, retry_policy=pol)
+                 for i in range(n_tasks)]
+        tmgr.submit_bulk(burst, done_cb=cb)
+        drained = tmgr.wait(timeout=240)
+        makespan = time.monotonic() - t0
+        inj.stop()
+        assert drained, "workload never drained"
+
+        total = n_tasks + ckpt_tasks
+        uids = [u for u, _, _ in completions]
+        states = [s for _, s, _ in completions]
+        by_uid = {u: r for u, _, r in completions}
+        ckpt_uids = {t.uid for t in ckpts}
+        evs = pool.events()
+        out = {
+            "makespan_s": makespan,
+            "tasks": total,
+            "completed": len(completions),
+            "unique": len(set(uids)),
+            "done": sum(1 for s in states if s == TaskState.DONE),
+            "pilot_lost": sum(1 for e in evs
+                              if e["event"] == "PILOT_LOST"),
+            "stolen_pilot_lost": sum(1 for e in evs
+                                     if e["event"] == "STOLEN"
+                                     and e.get("reason") == "pilot-lost"),
+            "stolen_retry": sum(1 for e in evs if e["event"] == "STOLEN"
+                                and e.get("reason") == "retry"),
+            "replaced": sum(1 for d in scaler.decisions
+                            if d["action"] == "replace_lost"),
+            "ckpt_resumed": sum(
+                1 for u in ckpt_uids
+                if (r := by_uid.get(u)) is not None
+                and r.state == TaskState.DONE and r.result["start"] > 0),
+            "injected": list(inj.events),
+        }
+        return out
+    finally:
+        inj.stop()
+        scaler.stop()
+        tmgr = None
+        pool.close()
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tasks", type=int, default=200,
+                    help="short-task burst size")
+    ap.add_argument("--task-ms", type=float, default=50.0)
+    ap.add_argument("--ckpt-tasks", type=int, default=3,
+                    help="long checkpointable step tasks")
+    ap.add_argument("--ckpt-steps", type=int, default=12)
+    ap.add_argument("--step-ms", type=float, default=60.0)
+    ap.add_argument("--seed", type=int, default=7,
+                    help="chaos schedule seed (deterministic storm)")
+    ap.add_argument("--storm-s", type=float, default=1.5)
+    ap.add_argument("--worker-kills", type=int, default=3)
+    ap.add_argument("--slot-failures", type=int, default=3)
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="repeat each run, keep the best makespan "
+                         "(container scheduling noise)")
+    ap.add_argument("--max-degradation-ratio", type=float, default=0.0,
+                    help="gate: chaos makespan / baseline makespan must "
+                         "stay under this (0 = report only)")
+    ap.add_argument("--out", default=str(Path(__file__).resolve().parent
+                                         .parent / "BENCH_resilience.json"))
+    args = ap.parse_args(argv)
+    reps = max(1, args.repeats)
+
+    def once(chaos):
+        return run_workload(chaos, args.tasks, args.task_ms,
+                            args.ckpt_tasks, args.ckpt_steps, args.step_ms,
+                            args.seed, args.storm_s, args.worker_kills,
+                            args.slot_failures)
+
+    print("# baseline: fault-free")
+    base = min((once(False) for _ in range(reps)),
+               key=lambda r: r["makespan_s"])
+    print(f"  makespan {base['makespan_s']:.3f}s, "
+          f"{base['done']}/{base['tasks']} done")
+
+    print("# chaos: pilot crash + worker kills + slot failures "
+          f"(seed={args.seed})")
+    storm = min((once(True) for _ in range(reps)),
+                key=lambda r: r["makespan_s"])
+    ratio = storm["makespan_s"] / base["makespan_s"]
+    print(f"  makespan {storm['makespan_s']:.3f}s "
+          f"({ratio:.2f}x baseline), {storm['done']}/{storm['tasks']} done")
+    print(f"  pilot_lost={storm['pilot_lost']} "
+          f"rerouted={storm['stolen_pilot_lost']} "
+          f"retry_reroutes={storm['stolen_retry']} "
+          f"replaced={storm['replaced']} "
+          f"ckpt_resumed={storm['ckpt_resumed']}")
+
+    results = {
+        "config": dict(vars(args)),
+        "baseline": base,
+        "chaos": storm,
+        "degradation_ratio": ratio,
+    }
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(results, indent=2))
+    print(f"wrote {out}")
+
+    for run, label in ((base, "baseline"), (storm, "chaos")):
+        if (run["done"] != run["tasks"] or run["completed"] != run["tasks"]
+                or run["unique"] != run["tasks"]):
+            raise SystemExit(
+                f"REGRESSION: {label} run lost or duplicated tasks "
+                f"(done={run['done']}, completed={run['completed']}, "
+                f"unique={run['unique']}, expected={run['tasks']})")
+    if storm["pilot_lost"] < 1 or storm["stolen_pilot_lost"] < 1:
+        raise SystemExit(
+            "REGRESSION: the injected crash produced no PILOT_LOST "
+            f"recovery (pilot_lost={storm['pilot_lost']}, "
+            f"rerouted={storm['stolen_pilot_lost']})")
+    if storm["ckpt_resumed"] < 1:
+        raise SystemExit(
+            "REGRESSION: no checkpointable task resumed from its snapshot "
+            "after the pilot loss (ckpt_resumed=0)")
+    if storm["replaced"] < 1:
+        raise SystemExit(
+            "REGRESSION: the scaler never replaced the lost pilot")
+    if (args.max_degradation_ratio
+            and ratio > args.max_degradation_ratio):
+        raise SystemExit(
+            f"REGRESSION: chaos makespan degraded {ratio:.2f}x over "
+            f"baseline (> {args.max_degradation_ratio:.2f}x)")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -60,6 +60,12 @@ _BENCH_HEADLINES = {
         (("cpu_burn", "proc", "gil_bound"), "proc gil_bound", "{:.2f}"),
         (("config", "cores"), "cores", "{:d}"),
     ],
+    "BENCH_resilience.json": [
+        (("degradation_ratio",), "chaos degradation", "{:.2f}x"),
+        (("chaos", "pilot_lost"), "pilots lost", "{:d}"),
+        (("chaos", "ckpt_resumed"), "ckpt resumes", "{:d}"),
+        (("chaos", "replaced"), "replaced", "{:d}"),
+    ],
     "BENCH_costmodel.json": [
         (("placement", "ratio"), "cost vs counted", "{:.2f}x"),
         (("placement", "cost_model", "makespan_s"), "probe makespan s",

@@ -11,13 +11,15 @@ from .apps import bash_app, python_app, spmd_app
 from .checkpoint import Checkpoint, CheckpointStore, TaskPreempted
 from .dfk import DataFlowKernel, current_dfk
 from .executors import Executor, ParslTask, ThreadPoolExecutor
-from .futures import (AppFuture, ResourceSpec, TaskRecord, TaskState,
-                      model_kind, new_uid)
+from .faults import FaultInjector, PilotLost, SlotFailure
+from .futures import (AppFuture, ResourceSpec, RetryPolicy, TaskRecord,
+                      TaskState, model_kind, new_uid)
 from .pilot import (Pilot, PilotDescription, PilotManager, PilotPool,
                     PoolScaler, ScalerConfig, TaskManager)
 from .placement import (CostModelPolicy, LeastLoaded, LocalityAware,
-                        PlacementPolicy, affinity_match, prefer_free_slots,
-                        prefer_specialized, resolve_policy)
+                        PlacementPolicy, affinity_match, filter_healthy,
+                        prefer_free_slots, prefer_specialized,
+                        resolve_policy)
 from .rpex import RPEXExecutor
 from .scheduler import SlotScheduler
 from .spmd_executor import SPMDFunctionExecutor
@@ -31,16 +33,20 @@ from .transport import (InprocTransport, ProcessTransport, WorkerDied,
 __all__ = [
     "Agent", "AppFuture", "Checkpoint", "CheckpointStore",
     "CostModelPolicy",
-    "DataFlowKernel", "Executor", "InprocTransport", "LeastLoaded",
+    "DataFlowKernel", "Executor", "FaultInjector", "InprocTransport",
+    "LeastLoaded",
     "LocalityAware", "ParslTask", "Pilot", "PilotDescription",
+    "PilotLost",
     "PilotManager", "PilotPool", "PlacementPolicy", "PoolScaler",
     "ProcessTransport", "RPEXExecutor", "RemoteError", "RemoteTraceback",
-    "ResourceSpec", "SPMDFunctionExecutor", "ScalerConfig",
-    "SerializationError", "SlotScheduler", "StateStore", "TaskManager",
+    "ResourceSpec", "RetryPolicy", "SPMDFunctionExecutor", "ScalerConfig",
+    "SerializationError", "SlotFailure", "SlotScheduler", "StateStore",
+    "TaskManager",
     "TaskPreempted", "TaskRecord", "TaskState",
     "ThreadPoolExecutor", "UnserializableResult", "WorkerDied",
     "affinity_match", "bash_app", "bind_future",
-    "current_dfk", "detect_kind", "make_transport", "model_kind", "new_uid",
+    "current_dfk", "detect_kind", "filter_healthy", "make_transport",
+    "model_kind", "new_uid",
     "overhead_from_events",
     "prefer_free_slots", "prefer_specialized", "python_app",
     "resolve_policy", "spmd_app", "translate", "union_intervals",

@@ -41,7 +41,21 @@ When a pass leaves the agent hungry (empty wait heap, free slots) the
 from a loaded sibling without lock-ordering hazards.
 
 ``shutdown(wait=True)`` is an event wait on the outstanding-task counter —
-it returns as soon as the agent drains (immediately when idle).
+it returns as soon as the agent drains (immediately when idle) and
+reports the uids of any tasks stranded past the timeout.
+
+Failure domain (docs/resilience.md): the loop stamps a liveness beat on
+every wakeup — scheduler-loop progress, not thread-alive — which the
+PilotPool's health monitor supervises (``ping``/``last_beat``); ``halt``
+silences both loops for lost-pilot recovery and crash injection.  FAILED
+tasks run through a retry classifier: a per-task ``RetryPolicy`` adds
+exponential backoff with deterministic jitter (delayed requeue bounded
+by the cv wait — still no polling), sends infrastructure failures
+(``WorkerDied``/pilot-lost/slot-failure) to a *different* pilot via the
+pool's ``reroute_cb``, short-circuits ``fatal_exceptions``, and
+quarantines tasks whose attempts keep killing workers.  Every attempt's
+error is kept on the record and chained (``__cause__``) into the final
+FAILED exception.
 
 All state transitions are timestamped through the StateStore's unified
 event stream so the Fig.6-style utilization breakdown (Scheduled/Launching/
@@ -50,18 +64,27 @@ Running/Idle) can be integrated offline.
 from __future__ import annotations
 
 import heapq
+import logging
 import threading
 import time
 from collections import deque
 from typing import Callable, Dict, List, Optional, Tuple
 
 from .checkpoint import Checkpoint, CheckpointStore, TaskPreempted
+from .faults import PilotLost, SlotFailure
 from .futures import (TERMINAL, ResourceSpec, TaskRecord, TaskState,
-                      model_kind, new_uid)
+                      chain_attempt_errors, model_kind, new_uid)
 from .scheduler import SlotScheduler
 from .spmd_executor import SPMDFunctionExecutor
 from .store import StateStore
-from .transport import InprocTransport
+from .transport import InprocTransport, WorkerDied
+
+_log = logging.getLogger(__name__)
+
+# errors that implicate the pilot's infrastructure rather than the task
+# body: a RetryPolicy with retry_different_pilot sends these retries
+# through the pool to another pilot instead of the local wait heap
+_INFRA_ERRORS = (WorkerDied, PilotLost, SlotFailure)
 
 
 class Agent:
@@ -98,6 +121,11 @@ class Agent:
 
         self._cv = threading.Condition()
         self._wait: List[Tuple[int, int, TaskRecord]] = []   # heap
+        self._delayed: List[Tuple[float, int, TaskRecord]] = []
+                                    # backoff-delayed retries: (ready_at,
+                                    # seq, task) heap; the loop's cv wait
+                                    # is bounded by the earliest ready
+                                    # time (deadline-driven, not polled)
         self._seq = 0
         self._running: Dict[str, TaskRecord] = {}
         self._replicas: Dict[str, str] = {}                  # replica -> orig
@@ -114,6 +142,18 @@ class Agent:
         self._outstanding = 0       # submitted, not yet terminal
         self._dirty = False         # a wake event arrived for the loop
         self._stop = threading.Event()
+        self._crashed = False       # chaos/lost-pilot halt: loops die
+                                    # silently (no drain, no refusal)
+        self._beat = time.monotonic()   # liveness beat, stamped only by
+                                        # the scheduler loop itself —
+                                        # heartbeat supervision judges
+                                        # scheduler-loop progress, not
+                                        # thread-alive
+        # infra-failed retry handoff: the PilotPool wires this so a
+        # WorkerDied/pilot-lost/slot-failure retry lands on a *different*
+        # pilot (called outside all locks, like idle_cb)
+        self.reroute_cb: Optional[
+            Callable[[TaskRecord, Optional[Callable]], None]] = None
 
         self._accepting = True      # False once draining/stopped: submit
                                     # refuses instead of heaping tasks no
@@ -253,10 +293,38 @@ class Agent:
         self._kadd(self._kind_queued, kind, task.resources.slots)
         self._dirty = True
 
-    def shutdown(self, wait: bool = True, timeout: float = 60.0):
+    def shutdown(self, wait: bool = True, timeout: float = 60.0
+                 ) -> List[str]:
+        """Returns the uids of tasks still outstanding when the drain
+        wait timed out (empty when drained, or with ``wait=False``) — a
+        hung body is diagnosable instead of silently abandoned.  The
+        stranded set is also logged and journaled (SHUTDOWN_STRANDED)."""
+        stranded: List[str] = []
+        if self._stop.is_set() or self._crashed:
+            # the scheduler loop is already gone: queued work can never
+            # drain, so a repeated (or post-crash) shutdown must not park
+            # on the full drain timeout
+            wait = False
         if wait:
             with self._cv:
-                self._cv.wait_for(lambda: self._outstanding == 0, timeout)
+                drained = self._cv.wait_for(
+                    lambda: self._outstanding == 0, timeout)
+                if not drained:
+                    stranded = sorted(
+                        {t.uid for t in self._running.values()
+                         if t.state not in TERMINAL}
+                        | {t.uid for _, _, t in self._wait
+                           if t.state not in TERMINAL}
+                        | {t.uid for _, _, t in self._delayed
+                           if t.state not in TERMINAL})
+            if stranded:
+                _log.warning(
+                    "Agent.shutdown: %d task(s) still outstanding after "
+                    "%.1fs drain wait: %s", len(stranded), timeout,
+                    ", ".join(stranded))
+                self.store.record_event("SHUTDOWN_STRANDED",
+                                        count=len(stranded),
+                                        uids=stranded[:32])
         with self._cv:
             # set under the cv so the submit fast path can never observe
             # "not stopped"; the scheduler thread joins before the pool is
@@ -267,6 +335,69 @@ class Agent:
             self._sched_thread.join(timeout=5.0)   # no more dispatches after
             self._mon_thread.join(timeout=5.0)
         self.transport.shutdown()
+        return stranded
+
+    # --------------------------- failure domain -------------------------- #
+    @property
+    def crashed(self) -> bool:
+        return self._crashed
+
+    @property
+    def last_beat(self) -> float:
+        """Monotonic stamp of the scheduler loop's last observed progress
+        (wakeup or scheduling pass).  Goes stale when the loop is wedged
+        or crashed — the PilotPool health monitor's loss signal."""
+        return self._beat
+
+    def ping(self):
+        """Ask the scheduler loop for a fresh liveness beat: wakes it
+        without marking work dirty; a healthy loop re-stamps ``last_beat``
+        on the wakeup, a wedged one leaves it to age out."""
+        with self._cv:
+            self._cv.notify_all()
+
+    def halt(self):
+        """Silence the scheduler and monitor loops without draining,
+        refusing, or notifying anyone — the lost-pilot recovery path (and
+        crash injection) uses this; running bodies become zombies whose
+        eventual finishes settle quietly against CANCELED records."""
+        with self._cv:
+            self._crashed = True
+            self._cv.notify_all()
+
+    def inject_crash(self):
+        """Chaos hook: simulate the whole pilot dying — loops stop
+        silently, heartbeats go stale, and the PilotPool health monitor
+        is expected to declare the pilot LOST and recover its tasks."""
+        self.halt()
+
+    def abandon_running(self
+                        ) -> List[Tuple[TaskRecord, Optional[Callable]]]:
+        """Detach every RUNNING task from this agent (the lost-pilot
+        sweep): records flip to CANCELED so the zombie bodies' eventual
+        finishes settle quietly without firing callbacks or retrying;
+        live checkpoint contexts get a preempt request so checkpointable
+        bodies unwind at their next save instead of grinding on.  Returns
+        (task, done_cb) pairs for non-replica tasks — the pool re-runs
+        them elsewhere from a fresh clone of each record."""
+        out: List[Tuple[TaskRecord, Optional[Callable]]] = []
+        with self._cv:
+            victims = list(self._running.values())
+            ctxs = list(self._ckpt_ctxs.values())
+            handoffs = list(self._preempt_handoff.values())
+            self._preempt_handoff.clear()
+            for t in victims:
+                if t.state in TERMINAL:
+                    continue
+                cb = self._done_cb.pop(t.uid, None)
+                t.transition(TaskState.CANCELED, self.store)
+                if t.replica_of is None:
+                    out.append((t, cb))
+        for h in handoffs:
+            h(None, None)       # release any reserved preempt budget
+        for ctx in ctxs:
+            ctx.request_preempt()
+        return out
 
     def inject_slot_failure(self, slots):
         """Simulate node failure: victims are FAILED then retried elsewhere."""
@@ -275,7 +406,7 @@ class Agent:
             for uid in victims:
                 t = self._running.get(uid)
                 if t is not None:
-                    t.error = RuntimeError(f"slot failure on {slots}")
+                    t.error = SlotFailure(f"slot failure on {slots}")
         return victims
 
     @staticmethod
@@ -374,7 +505,7 @@ class Agent:
         """
         taken: List[Tuple[TaskRecord, Optional[Callable]]] = []
         with self._cv:
-            if not self._wait:
+            if not self._wait and not (pred is None and self._delayed):
                 return taken
             keep: List[Tuple[int, int, TaskRecord]] = []
             slots_left = max_slots if max_slots is not None else float("inf")
@@ -410,6 +541,33 @@ class Agent:
                 self._kadd(self._kind_queued, kind, -t.resources.slots)
             keep.sort()
             self._wait = keep                    # sorted list is a valid heap
+            if pred is None and self._delayed:
+                # the drain path must also sweep backoff-delayed retries —
+                # moving to another pilot waives the remaining backoff
+                # (delayed tasks are never in _queued_slots, so only the
+                # outstanding/demand counters move)
+                still: List[Tuple[float, int, TaskRecord]] = []
+                for item in self._delayed:
+                    _, _, t = item
+                    if t.state in TERMINAL:
+                        self._done_cb.pop(t.uid, None)
+                        self._outstanding -= 1
+                        self._demand_slots -= t.resources.slots
+                        self._kadd(self._kind_demand, model_kind(t),
+                                   -t.resources.slots)
+                        continue
+                    if ((max_tasks is not None and len(taken) >= max_tasks)
+                            or t.resources.slots > slots_left):
+                        still.append(item)
+                        continue
+                    taken.append((t, self._done_cb.pop(t.uid, None)))
+                    slots_left -= t.resources.slots
+                    self._outstanding -= 1
+                    self._demand_slots -= t.resources.slots
+                    self._kadd(self._kind_demand, model_kind(t),
+                               -t.resources.slots)
+                heapq.heapify(still)
+                self._delayed = still
             if self._outstanding == 0:
                 self._cv.notify_all()            # a shutdown wait may park
         return taken
@@ -467,13 +625,54 @@ class Agent:
     def _loop(self):
         while True:
             with self._cv:
-                while not self._dirty and not self._stop.is_set():
-                    self._cv.wait()
-                if self._stop.is_set():
+                while (not self._dirty and not self._stop.is_set()
+                       and not self._crashed):
+                    # liveness beat: stamped only here and below, by the
+                    # scheduler loop itself on every wakeup — a wedged or
+                    # crashed loop goes visibly stale to the health monitor
+                    self._beat = time.monotonic()
+                    if self._delayed:
+                        # bound the wait by the earliest backoff deadline:
+                        # delayed-retry promotion is deadline-driven, not
+                        # polled
+                        wait_s = self._delayed[0][0] - time.monotonic()
+                        if wait_s <= 0.0:
+                            self._promote_delayed()
+                            continue
+                        self._cv.wait(wait_s)
+                    else:
+                        self._cv.wait()
+                    self._promote_delayed()
+                if self._stop.is_set() or self._crashed:
                     return
                 self._dirty = False
+                self._beat = time.monotonic()
             self._schedule_pass()
             self._maybe_request_work()
+
+    def _promote_delayed(self):
+        """Caller holds self._cv: move backoff-delayed retries whose
+        ready time has arrived into the wait heap (and into the queued
+        counters they were excluded from while parked)."""
+        now = time.monotonic()
+        while self._delayed and self._delayed[0][0] <= now:
+            _, _, t = heapq.heappop(self._delayed)
+            if t.state in TERMINAL:      # canceled while backing off
+                self._done_cb.pop(t.uid, None)
+                self._outstanding -= 1
+                self._demand_slots -= t.resources.slots
+                self._kadd(self._kind_demand, model_kind(t),
+                           -t.resources.slots)
+                if self._outstanding == 0:
+                    self._cv.notify_all()
+                continue
+            heapq.heappush(self._wait,
+                           (-t.resources.priority, self._seq, t))
+            self._seq += 1
+            self._queued_slots += t.resources.slots
+            self._kadd(self._kind_queued, model_kind(t),
+                       t.resources.slots)
+            self._dirty = True
 
     def _maybe_request_work(self):
         """After a pass: if the wait heap is empty and slots are free, ask
@@ -634,25 +833,85 @@ class Agent:
             self._settle(task)
             return
 
-        if state == TaskState.FAILED and task.retries < task.max_retries:
-            task.retries += 1
-            task.error = None
-            task.slot_ids = ()
-            # a checkpointable retry resumes from its last saved step —
-            # the checkpoint is only discarded on DONE
-            task.transition(TaskState.TRANSLATED, self.store)
-            with self._cv:                    # requeue keeps it outstanding
-                self._replicated.discard(task.uid)   # fresh attempt: may
-                                                     # straggle anew
-                heapq.heappush(self._wait,
-                               (-task.resources.priority, self._seq, task))
-                self._seq += 1
-                self._queued_slots += task.resources.slots
-                self._kadd(self._kind_queued, model_kind(task),
-                           task.resources.slots)
-                self._dirty = True
-                self._cv.notify_all()
-            return
+        if state == TaskState.FAILED:
+            err = task.error
+            policy = task.retry_policy
+            if isinstance(err, WorkerDied):
+                # poison tracking: this attempt took a worker process down
+                task.worker_deaths += 1
+            fatal = policy is not None and policy.is_fatal(err)
+            quarantined = (policy is not None
+                           and policy.quarantine_after is not None
+                           and task.worker_deaths >= policy.quarantine_after)
+            if quarantined and not task.quarantined:
+                # the task's attempts keep killing workers: fail it
+                # terminally instead of respawn-storming the proc pool
+                task.quarantined = True
+                self.store.record_event(
+                    "QUARANTINED", uid=task.uid, pilot=task.pilot_uid,
+                    worker_deaths=task.worker_deaths,
+                    attempts=task.retries + 1,
+                    error=repr(err)[:200] if err is not None else None)
+            if (not fatal and not quarantined
+                    and task.retries < task.max_retries):
+                task.retries += 1
+                if err is not None:
+                    task.attempt_errors.append(err)   # history, not a wipe:
+                                                      # the final failure
+                                                      # chains all attempts
+                task.error = None
+                task.slot_ids = ()
+                # a checkpointable retry resumes from its last saved step —
+                # the checkpoint is only discarded on DONE
+                task.transition(TaskState.TRANSLATED, self.store)
+                reroute = self.reroute_cb
+                if (reroute is not None and policy is not None
+                        and policy.retry_different_pilot
+                        and isinstance(err, _INFRA_ERRORS)):
+                    # infrastructure fault: this pilot's workers/slots are
+                    # suspect — hand the retry to the pool, which places
+                    # it on a different pilot.  Hand off BEFORE
+                    # decrementing (the _preempt_finish invariant): a
+                    # drain observing outstanding == 0 must already see
+                    # the task on its new pilot, never lose it between.
+                    cb = self._done_cb.pop(task.uid, None)
+                    with self._cv:
+                        self._replicated.discard(task.uid)
+                    reroute(task, cb)
+                    with self._cv:
+                        self._outstanding -= 1
+                        self._demand_slots -= task.resources.slots
+                        self._kadd(self._kind_demand, model_kind(task),
+                                   -task.resources.slots)
+                        if self._outstanding == 0:
+                            self._cv.notify_all()
+                    return
+                delay = (policy.backoff_s(task.retries, task.uid)
+                         if policy is not None else 0.0)
+                with self._cv:                # requeue keeps it outstanding
+                    self._replicated.discard(task.uid)   # fresh attempt:
+                                                         # may straggle anew
+                    if delay > 0.0:
+                        # parked off the wait heap until the backoff
+                        # deadline; the loop's cv wait is bounded by it
+                        heapq.heappush(self._delayed,
+                                       (time.monotonic() + delay,
+                                        self._seq, task))
+                    else:
+                        heapq.heappush(
+                            self._wait,
+                            (-task.resources.priority, self._seq, task))
+                        self._queued_slots += task.resources.slots
+                        self._kadd(self._kind_queued, model_kind(task),
+                                   task.resources.slots)
+                        self._dirty = True
+                    self._seq += 1
+                    self._cv.notify_all()
+                return
+            if task.attempt_errors:
+                # surface the whole history: earlier attempts become the
+                # __cause__ ancestry of the final exception
+                chain_attempt_errors(task)
 
         task.transition(state, self.store)
         if state == TaskState.DONE and task.checkpointable:
@@ -767,6 +1026,8 @@ class Agent:
         # stop-event wait, not a sleep: exits promptly on shutdown and never
         # touches the submit->schedule->complete path.
         while not self._stop.wait(self.monitor_interval):
+            if self._crashed:
+                return               # the pilot "died": no replicas either
             now = time.monotonic()
             with self._cv:
                 running = [

@@ -49,7 +49,8 @@ import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from .executors import Executor, ParslTask, ThreadPoolExecutor
-from .futures import AppFuture, ResourceSpec, TaskRecord, TaskState, new_uid
+from .futures import (AppFuture, ResourceSpec, RetryPolicy, TaskRecord,
+                      TaskState, new_uid)
 
 _current: List["DataFlowKernel"] = []
 
@@ -170,7 +171,8 @@ class DataFlowKernel:
     def submit(self, fn, args: tuple = (), kwargs: Optional[dict] = None,
                resources: Optional[ResourceSpec] = None, retries: int = 0,
                executor: Optional[str] = None,
-               sticky: Optional[bool] = None) -> AppFuture:
+               sticky: Optional[bool] = None,
+               retry_policy: Optional[RetryPolicy] = None) -> AppFuture:
         kwargs = kwargs or {}
         if sticky is not None:
             # per-invocation steal-eligibility override: threaded through the
@@ -245,7 +247,8 @@ class DataFlowKernel:
                 p for p in (getattr(f.task, "pilot_uid", None)
                             for f in inputs) if p))
             pt = ParslTask(fn, r_args, r_kwargs, node.resources, retries, key,
-                           executor=label, affinity=affinity)
+                           executor=label, affinity=affinity,
+                           retry_policy=retry_policy)
             node.transition(TaskState.TRANSLATED)
             return label, pt, future
 

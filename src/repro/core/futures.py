@@ -14,6 +14,7 @@ timelines exactly the way the paper does.
 from __future__ import annotations
 
 import itertools
+import random
 import threading
 import time
 from concurrent.futures import Future
@@ -47,6 +48,88 @@ def model_kind(task: "TaskRecord") -> str:
     app kind when one exists (bash apps *execute* as kind "python" but
     their run times are a bash population), else the execution kind."""
     return task.app_kind or task.kind
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Per-app retry semantics (``@python_app(retry_policy=...)``).
+
+    ``max_retries`` additional attempts are granted after the first
+    failure; each retry is requeued after an exponential backoff with
+    deterministic jitter (seeded from the task uid and attempt number, so
+    runs are reproducible).  The agent's retry classifier also consults:
+
+    fatal_exceptions      — error types that short-circuit retrying: the
+                            task fails terminally on the first match.
+    retry_different_pilot — infrastructure failures (WorkerDied, a lost
+                            pilot, an injected slot failure) send the
+                            retry through the pool to a *different*
+                            pilot when one is compatible; app-level
+                            exceptions always retry in place.
+    quarantine_after      — poison quarantine: a task whose attempts have
+                            killed this many worker processes is FAILED
+                            terminally (with a QUARANTINED journal event)
+                            instead of respawn-storming the proc pool.
+                            None disables quarantine.
+
+    Tasks declared with the legacy ``retries=N`` (no policy) keep the old
+    behavior exactly: immediate in-place requeue, no classification."""
+    max_retries: int = 3
+    backoff_base_s: float = 0.05    # first-retry delay; 0 = immediate
+    backoff_factor: float = 2.0     # exponential growth per attempt
+    backoff_max_s: float = 5.0      # delay ceiling
+    jitter: float = 0.1             # +/- fraction of the delay randomized
+    fatal_exceptions: Tuple[type, ...] = ()
+    retry_different_pilot: bool = True
+    quarantine_after: Optional[int] = 3
+
+    def backoff_s(self, attempt: int, token: str = "") -> float:
+        """Delay before retry ``attempt`` (1-based).  Jitter is seeded
+        from ``(token, attempt)`` — same task, same attempt, same delay —
+        so chaos runs replay deterministically."""
+        if self.backoff_base_s <= 0.0:
+            return 0.0
+        d = min(self.backoff_max_s,
+                self.backoff_base_s * self.backoff_factor ** (attempt - 1))
+        if self.jitter > 0.0:
+            r = random.Random(f"{token}:{attempt}")
+            d *= 1.0 + self.jitter * (2.0 * r.random() - 1.0)
+        return d
+
+    def is_fatal(self, err: Optional[BaseException]) -> bool:
+        return (bool(self.fatal_exceptions) and err is not None
+                and isinstance(err, tuple(self.fatal_exceptions)))
+
+
+def _attach_root_cause(exc: BaseException, cause: BaseException):
+    """Hang ``cause`` off the *root* of ``exc``'s existing cause chain —
+    pre-set causes (e.g. WorkerDied raised ``from`` a pipe EOFError) are
+    preserved, not clobbered."""
+    seen = {id(exc)}
+    root = exc
+    while root.__cause__ is not None:
+        root = root.__cause__
+        if id(root) in seen or root is cause:
+            return
+        seen.add(id(root))
+    if root is not cause:
+        root.__cause__ = cause
+
+
+def chain_attempt_errors(task: "TaskRecord"):
+    """Link the attempt-error history into the exception that will
+    surface: each earlier failure becomes the ``__cause__`` of the next,
+    ending at ``task.error``, so the final FAILED exception shows all N
+    attempts instead of only the last."""
+    prev: Optional[BaseException] = None
+    for e in task.attempt_errors:
+        if e is None or e is task.error or e is prev:
+            continue
+        if prev is not None:
+            _attach_root_cause(e, prev)
+        prev = e
+    if prev is not None and task.error is not None:
+        _attach_root_cause(task.error, prev)
 
 
 @dataclass
@@ -101,6 +184,16 @@ class TaskRecord:
     error: Optional[BaseException] = None
     retries: int = 0
     max_retries: int = 0
+    retry_policy: Optional[RetryPolicy] = None  # translator stamp; None =
+                                                # legacy immediate in-place
+                                                # retries up to max_retries
+    attempt_errors: List[BaseException] = field(default_factory=list)
+                                    # why each prior attempt failed; the
+                                    # final FAILED exception chains these
+                                    # as its __cause__ ancestry
+    worker_deaths: int = 0          # attempts that killed a worker
+                                    # process (poison-quarantine counter)
+    quarantined: bool = False       # terminally FAILED by quarantine
     slot_ids: Tuple[int, ...] = ()
     replica_of: Optional[str] = None
     res_kind: Optional[str] = None  # stamped by the translator

@@ -31,6 +31,19 @@ streams, spawns a new pilot from a template description when queue wait
 exceeds a threshold (multi-template: the policy picks the template whose
 kinds match the starving queue), and drains + retires idle pilots
 (PILOT_RETIRE).
+
+Pilots are mortal (docs/resilience.md): with heartbeat supervision
+enabled (``heartbeat_timeout_s``) a pool health monitor watches every
+agent's liveness beat — scheduler-loop progress, probed with ``ping`` —
+and declares a silent pilot LOST (``mark_lost``): a ``PILOT_LOST`` event
+is journaled like PILOT_RETIRE, queued tasks re-route to survivors via
+the orphan path, RUNNING checkpointable tasks re-adopt their last
+durable checkpoint on the new pilot, non-checkpointable RUNNING tasks
+FAIL visibly into the retry path, and the PoolScaler's replace-on-loss
+trigger restores the lost capacity from a template.  Infrastructure-
+failed retries (``RetryPolicy.retry_different_pilot``) also arrive here,
+re-placed on a different pilot than the one whose worker or slot just
+failed.
 """
 from __future__ import annotations
 
@@ -44,8 +57,10 @@ import jax
 
 from .agent import Agent
 from .checkpoint import CheckpointStore
-from .futures import ResourceSpec, TaskRecord, TaskState, new_uid
-from .placement import PlacementPolicy, resolve_policy
+from .faults import PilotLost
+from .futures import (ResourceSpec, TaskRecord, TaskState,
+                      chain_attempt_errors, new_uid)
+from .placement import PlacementPolicy, filter_healthy, resolve_policy
 from .scheduler import SlotScheduler
 from .spmd_executor import SPMDFunctionExecutor
 from .store import StateStore
@@ -104,6 +119,8 @@ class Pilot:
                                start_method=desc.proc_start_method)).start()
         self.t_start = time.monotonic()
         self.draining = False     # a draining pilot accepts no new work
+        self.lost = False         # declared LOST by health supervision:
+                                  # close() must not wait on its zombies
         self._closed = False
         self.store.record_event("PILOT_START", pilot=self.uid, n_slots=n,
                                 kinds=list(desc.kinds or ()) or None,
@@ -227,8 +244,33 @@ class Pilot:
             return
         self._closed = True
         self.draining = True
-        self.agent.shutdown()
+        # a LOST pilot's outstanding count never drains (its zombie
+        # bodies settle against CANCELED records, hung ones never do) —
+        # don't park the pool close on it
+        self.agent.shutdown(wait=not self.lost)
         self.store.close()
+
+
+def _recovery_clone(task: TaskRecord) -> TaskRecord:
+    """Fresh record (same uid) for re-running a task recovered from a
+    LOST pilot: the zombie body may still be executing on the lost
+    pilot's workers and mutating the original record, so the survivor's
+    attempt must share no mutable state with it.  The zombie's eventual
+    finish settles against the CANCELED original and fires no callback
+    (abandon_running popped it)."""
+    return TaskRecord(
+        uid=task.uid, kind=task.kind, fn=task.fn, args=task.args,
+        kwargs=dict(task.kwargs), resources=task.resources,
+        timestamps=dict(task.timestamps),
+        depends_on=list(task.depends_on),
+        retries=task.retries, max_retries=task.max_retries,
+        retry_policy=task.retry_policy,
+        attempt_errors=list(task.attempt_errors),
+        worker_deaths=task.worker_deaths,
+        res_kind=task.res_kind, app_kind=task.app_kind,
+        pilot_uid=task.pilot_uid, sticky=task.sticky,
+        affinity=task.affinity, checkpointable=task.checkpointable,
+        ckpt_key=task.ckpt_key, inproc_only=task.inproc_only)
 
 
 class PilotPool:
@@ -247,7 +289,9 @@ class PilotPool:
                  pilots: Optional[Sequence[Pilot]] = None,
                  steal: bool = True,
                  preempt: bool = True,
-                 policy: Union[None, str, PlacementPolicy] = None):
+                 policy: Union[None, str, PlacementPolicy] = None,
+                 heartbeat_timeout_s: Optional[float] = None,
+                 heartbeat_interval_s: Optional[float] = None):
         if pilots is None and descs is None:
             descs = [PilotDescription()]
         self.pilots: List[Pilot] = (list(pilots) if pilots is not None
@@ -267,13 +311,35 @@ class PilotPool:
         self._lock = threading.RLock()
         self._migrate_hooks: List[Callable] = []
         self._closed = False
+        self._lost_pending: List[str] = []   # LOST, not yet replaced —
+                                             # PoolScaler's replace-on-
+                                             # loss trigger consumes it
+        # heartbeat supervision: with a timeout set, a monitor thread
+        # probes every agent's liveness beat (ping + stale-age judgment)
+        # and declares silent pilots LOST.  None (default) disables it.
+        self._hb_timeout = heartbeat_timeout_s
+        self._hb_interval = (heartbeat_interval_s
+                             if heartbeat_interval_s is not None
+                             else (heartbeat_timeout_s / 4.0
+                                   if heartbeat_timeout_s else None))
+        self._hb_stop = threading.Event()
+        self._hb_thread: Optional[threading.Thread] = None
         for p in self.pilots:
             self._wire(p)
+        if self._hb_timeout:
+            self._hb_thread = threading.Thread(target=self._health_loop,
+                                               daemon=True)
+            self._hb_thread.start()
 
     def _wire(self, p: Pilot):
         if self.steal_enabled:
             p.agent.idle_cb = (
                 lambda free, _p=p: self.request_work(_p, free))
+        # infrastructure-failed retries prefer a different pilot: the
+        # agent's retry classifier hands the attempt here instead of
+        # requeueing it on the pilot whose worker or slot just failed
+        p.agent.reroute_cb = (
+            lambda task, cb, _p=p: self._reroute_retry(_p, task, cb))
 
     def __len__(self):
         with self._lock:
@@ -300,7 +366,12 @@ class PilotPool:
                 f"no pilot accepts task {task.uid} "
                 f"(kind={task.kind!r}, res_kind={task.res_kind!r}; pool "
                 f"kinds={[p.desc.kinds for p in pilots]!r})")
-        return compat
+        # prefer pilots whose heartbeat is fresh — a crashed or silent
+        # pilot is a bad destination even before the monitor formally
+        # declares it LOST.  Fall back to the unfiltered set rather than
+        # refusing: mark_lost will re-route whatever lands badly.
+        healthy = filter_healthy(compat, self._hb_timeout)
+        return healthy or compat
 
     def route(self, task: TaskRecord) -> Pilot:
         """The policy's pick among pilots whose description accepts the
@@ -385,6 +456,7 @@ class PilotPool:
                 err = e
         task.error = err or RuntimeError(
             f"no pilot could take displaced task {task.uid}")
+        chain_attempt_errors(task)
         task.transition(TaskState.FAILED)
         if cb is not None:
             cb(task)
@@ -566,6 +638,128 @@ class PilotPool:
             self._place_orphan(task, cb, pilot, reason="drain")
         return True
 
+    # -------------------------- failure domains -------------------------- #
+    def mark_lost(self, pilot: Pilot, reason: str = "missed-heartbeat"
+                  ) -> bool:
+        """Declare a pilot LOST and recover its work onto the survivors.
+
+        Unlike ``retire`` there is no drain: the pilot is presumed dead
+        (crashed loop, silent heartbeat), so its agent is halted, queued
+        tasks are stolen wholesale onto survivors, and RUNNING tasks are
+        abandoned — checkpointable ones re-adopt their last durable
+        snapshot on a new pilot, the rest consume a retry or fail with a
+        PilotLost chained into their attempt history.  The PILOT_LOST
+        event lands in the lost pilot's own journal (like PILOT_RETIRE)
+        so replay after a restart sees the loss.  Returns False when the
+        pilot is not an active member (already lost/retired) or the pool
+        is closed."""
+        with self._lock:
+            if self._closed or pilot not in self.pilots:
+                return False
+            self.pilots.remove(pilot)
+            self.retired.append(pilot)
+            self._lost_pending.append(pilot.uid)
+        pilot.lost = True
+        pilot.draining = True
+        pilot.agent.stop_accepting()
+        pilot.agent.halt()
+        # queued first (pred=None also sweeps the backoff-delayed heap),
+        # then the abandoned RUNNING set — their zombie bodies settle
+        # quietly because abandon_running already CANCELed the records
+        queued = pilot.agent.steal()
+        abandoned = pilot.agent.abandon_running()
+        pilot.store.record_event("PILOT_LOST", pilot=pilot.uid,
+                                 reason=reason, queued=len(queued),
+                                 running=len(abandoned))
+        for task, cb in queued:
+            self._place_orphan(task, cb, pilot, reason="pilot-lost")
+        for task, cb in abandoned:
+            self._recover_running(task, cb, pilot)
+        return True
+
+    def _recover_running(self, task: TaskRecord, cb: Optional[Callable],
+                         src: Pilot):
+        """Recover one task that was RUNNING when its pilot was lost.
+
+        The original record was CANCELed by ``abandon_running`` (its
+        zombie body may still be executing in a dead worker); recovery
+        operates on a fresh clone with the *same uid* so journal keys,
+        checkpoint keys, and caller futures all stay valid while nothing
+        mutable is shared with the zombie.  A checkpointable task resumes
+        from its last durable snapshot without consuming a retry — the
+        work survived, only the pilot died.  A non-checkpointable task
+        lost real progress: the PilotLost counts against its retry
+        budget, or fails it terminally with the full attempt history
+        chained."""
+        clone = _recovery_clone(task)
+        err = PilotLost(
+            f"pilot {src.uid} lost while {task.uid} was running")
+        if clone.checkpointable:
+            clone.transition(TaskState.TRANSLATED)
+            self._place_orphan(clone, cb, src, reason="pilot-lost")
+            return
+        clone.attempt_errors.append(err)
+        policy = clone.retry_policy
+        fatal = policy is not None and policy.is_fatal(err)
+        if not fatal and clone.retries < clone.max_retries:
+            clone.retries += 1
+            clone.transition(TaskState.TRANSLATED)
+            self._place_orphan(clone, cb, src, reason="pilot-lost")
+            return
+        clone.error = err
+        chain_attempt_errors(clone)
+        clone.transition(TaskState.FAILED, src.store)
+        if cb is not None:
+            cb(clone)
+
+    def _reroute_retry(self, src: Pilot, task: TaskRecord,
+                       cb: Optional[Callable]):
+        """Place an infrastructure-failed retry on a *different* pilot.
+
+        The agent's retry classifier calls this (via ``reroute_cb``) for
+        WorkerDied / PilotLost / SlotFailure attempts whose RetryPolicy
+        asks for ``retry_different_pilot``: the pilot whose worker just
+        died is the worst candidate for the next attempt.  Falls back to
+        the orphan path (which may land back on ``src``) when no other
+        pilot is compatible."""
+        try:
+            cands = [p for p in self._compatible(task) if p is not src]
+        except RuntimeError:
+            cands = []
+        if cands:
+            fitting = [p for p in cands
+                       if task.resources.slots <= p.scheduler.capacity]
+            dst = self.policy.place(task, fitting or cands)
+            self._migrate(task, src, dst, cb, reason="retry")
+        else:
+            self._place_orphan(task, cb, src, reason="retry")
+
+    def take_lost(self) -> List[str]:
+        """Drain the pending lost-pilot uids (PoolScaler's replace-on-loss
+        trigger reads this exactly once per loss)."""
+        with self._lock:
+            pending, self._lost_pending = self._lost_pending, []
+            return pending
+
+    def _health_loop(self):
+        """Heartbeat monitor: ping agents whose beat is merely stale (a
+        healthy loop re-stamps on wake, so the next probe sees a fresh
+        beat) and declare LOST those that crashed or stayed silent past
+        the full timeout."""
+        while not self._hb_stop.wait(self._hb_interval):
+            for p in self.active():
+                if p.draining:
+                    continue
+                a = p.agent
+                if a.crashed:
+                    self.mark_lost(p, reason="crash")
+                    continue
+                age = time.monotonic() - a.last_beat
+                if age > self._hb_timeout:
+                    self.mark_lost(p, reason="missed-heartbeat")
+                elif age > self._hb_interval:
+                    a.ping()
+
     # ----------------------------- checkpoints --------------------------- #
     def checkpoint_step(self, key: str) -> Optional[int]:
         """Latest checkpointed step for ``key`` across every pilot's
@@ -615,6 +809,9 @@ class PilotPool:
                 return
             self._closed = True
             ps = list(self.pilots) + list(self.retired)
+        self._hb_stop.set()
+        if self._hb_thread is not None:
+            self._hb_thread.join(timeout=5.0)
         for p in ps:
             p.close()
 
@@ -720,6 +917,30 @@ class PoolScaler:
         self._attach()
         self.pool.rebalance()       # stealing first: it is always cheaper
         now = time.monotonic()      # than spawning a pilot
+
+        # replace-on-loss: a LOST pilot's capacity is restored from a
+        # template immediately — loss is not load, so the trigger bypasses
+        # the spawn cooldown and the queue-wait threshold.  The template
+        # choice still goes through the placement policy so a lost GPU
+        # pilot is replaced by one whose kinds cover the starving demand.
+        for lost_uid in self.pool.take_lost():
+            if len(self.pool) >= self.cfg.max_pilots:
+                self.decisions.append({"action": "replace_lost_skipped",
+                                       "lost": lost_uid,
+                                       "reason": "max_pilots", "t": now})
+                continue
+            starving = [kd for p in self.pool.active()
+                        for kd in p.agent.queued_task_kinds()]
+            template = self.pool.policy.pick_template(
+                starving, self.cfg.templates or [self.cfg.template])
+            p = self.pool.add_pilot(self._spawn_desc(template))
+            self._spawned.add(p.uid)
+            self._last_spawn = now
+            self.decisions.append({"action": "replace_lost",
+                                   "lost": lost_uid, "pilot": p.uid,
+                                   "template": template.name, "t": now})
+            self.pool.request_work(p, p.scheduler.n_free)
+
         pilots = self.pool.active()
 
         # scale up: the queue-wait signal passed the threshold even after
@@ -796,10 +1017,12 @@ class PilotManager:
     def submit_pilots(self, descs: Sequence[PilotDescription],
                       steal: bool = True,
                       preempt: bool = True,
-                      policy: Union[None, str, PlacementPolicy] = None
+                      policy: Union[None, str, PlacementPolicy] = None,
+                      heartbeat_timeout_s: Optional[float] = None
                       ) -> PilotPool:
         pool = PilotPool(descs=descs, steal=steal, preempt=preempt,
-                         policy=policy)
+                         policy=policy,
+                         heartbeat_timeout_s=heartbeat_timeout_s)
         for p in pool.pilots:
             self.pilots[p.uid] = p
         return pool

@@ -47,6 +47,7 @@ the enumeration order rules, matching the historical ``min()`` behavior.
 """
 from __future__ import annotations
 
+import time
 from typing import (Callable, Dict, List, Optional, Sequence, Tuple, Union,
                     TYPE_CHECKING)
 
@@ -59,6 +60,30 @@ TieBreak = Callable[["TaskRecord", "Pilot"], float]
 # starving-queue demand: one entry per queued task — (the identifiers the
 # task routes under, its slot demand).  See Agent.queued_task_kinds().
 KindDemand = Sequence[Tuple[Tuple[str, ...], int]]
+
+
+def filter_healthy(pilots: Sequence["Pilot"],
+                   heartbeat_timeout_s: Optional[float] = None
+                   ) -> List["Pilot"]:
+    """Health-aware candidate filtering: drop pilots that are visibly
+    dead or dying *before* any policy scores them — a crashed agent, or
+    (when heartbeat supervision is active) one whose liveness beat has
+    aged past the timeout but has not yet been declared LOST.  Routing
+    to such a pilot only strands the task until the health monitor's
+    recovery sweep re-routes it anyway.  Callers fall back to the
+    unfiltered list when nothing healthy remains (the monitor will sort
+    the rest out)."""
+    now = time.monotonic()
+    out = []
+    for p in pilots:
+        agent = p.agent
+        if getattr(agent, "crashed", False):
+            continue
+        if (heartbeat_timeout_s is not None
+                and now - agent.last_beat > heartbeat_timeout_s):
+            continue
+        out.append(p)
+    return out
 
 
 # ------------------------- composable tie-breakers ------------------------ #

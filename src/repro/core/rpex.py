@@ -61,7 +61,8 @@ class RPEXExecutor(Executor):
                  scaler: Optional[ScalerConfig] = None,
                  steal: bool = True,
                  preempt: bool = True,
-                 placement: Union[None, str, PlacementPolicy] = None):
+                 placement: Union[None, str, PlacementPolicy] = None,
+                 heartbeat_timeout_s: Optional[float] = None):
         # "Once initialized, RPEX ... starts a new RP session and creates
         # the Pilot Manager and the Task Manager."
         policy = resolve_policy(placement)
@@ -74,14 +75,15 @@ class RPEXExecutor(Executor):
             else:
                 descs = list(pilot_desc)
             self.pmgr = PilotManager()
-            self.pool = self.pmgr.submit_pilots(descs, steal=steal,
-                                                preempt=preempt,
-                                                policy=policy)
+            self.pool = self.pmgr.submit_pilots(
+                descs, steal=steal, preempt=preempt, policy=policy,
+                heartbeat_timeout_s=heartbeat_timeout_s)
         else:
             self.pmgr = None
             self.pool = PilotPool(
                 pilots=list(pilots) if pilots is not None else [pilot],
-                steal=steal, preempt=preempt, policy=policy)
+                steal=steal, preempt=preempt, policy=policy,
+                heartbeat_timeout_s=heartbeat_timeout_s)
         self.tmgr = TaskManager(self.pool)
         self.scaler = (PoolScaler(self.pool, scaler).start()
                        if scaler is not None else None)
@@ -102,7 +104,8 @@ class RPEXExecutor(Executor):
     def submit(self, ptask: ParslTask, future: AppFuture):
         task = translate(ptask.fn, ptask.args, ptask.kwargs,
                          ptask.resources, ptask.retries,
-                         affinity=ptask.affinity)
+                         affinity=ptask.affinity,
+                         retry_policy=ptask.retry_policy)
         future.task = task
         self.tmgr.submit(task, done_cb=bind_future(task, future),
                          workflow_key=ptask.key)
@@ -113,7 +116,8 @@ class RPEXExecutor(Executor):
         cbs = {}
         for pt, fut in pairs:
             task = translate(pt.fn, pt.args, pt.kwargs, pt.resources,
-                             pt.retries, affinity=pt.affinity)
+                             pt.retries, affinity=pt.affinity,
+                             retry_policy=pt.retry_policy)
             fut.task = task
             if pt.key is not None:
                 keys[task.uid] = pt.key

@@ -279,6 +279,13 @@ class StateStore:
                 rec["result"] = task.result
         if task.error is not None:
             rec["error"] = repr(task.error)[:500]
+        if task.attempt_errors:
+            # why each prior attempt failed (the retry path keeps the
+            # history instead of wiping task.error): a FAILED record in
+            # the journal shows all N attempts, matching the __cause__
+            # chain the surfaced exception carries
+            rec["attempt_errors"] = [repr(e)[:200]
+                                     for e in task.attempt_errors]
         ev = {
             "event": "STATE", "uid": task.uid,
             "state": task.state.value, "t": rec["mt"],

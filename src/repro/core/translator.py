@@ -14,7 +14,8 @@ import shlex
 import subprocess
 from typing import Callable, Optional, Sequence
 
-from .futures import AppFuture, ResourceSpec, TaskRecord, TaskState, new_uid
+from .futures import (AppFuture, ResourceSpec, RetryPolicy, TaskRecord,
+                      TaskState, new_uid)
 
 
 def detect_kind(fn: Callable) -> str:
@@ -43,7 +44,8 @@ def _bash_runner(cmd_builder: Callable):
 def translate(fn: Callable, args: tuple, kwargs: dict,
               resources: Optional[ResourceSpec] = None,
               max_retries: int = 0,
-              affinity: Sequence[str] = ()) -> TaskRecord:
+              affinity: Sequence[str] = (),
+              retry_policy: Optional[RetryPolicy] = None) -> TaskRecord:
     """Capability (ii): 1:1 Parsl-task -> pilot-task translation.
 
     ``affinity`` carries runtime-discovered data-affinity hints (the DFK
@@ -51,6 +53,11 @@ def translate(fn: Callable, args: tuple, kwargs: dict,
     merge — deduplicated, static ResourceSpec hints (input-array device /
     pilot names) first — into the
     ``TaskRecord.affinity`` stamp a LocalityAware placement policy scores.
+
+    ``retry_policy`` supersedes the bare ``max_retries`` count when given:
+    the attempt budget comes from ``retry_policy.max_retries`` and failed
+    attempts get backoff, error classification, and poison quarantine
+    (docs/resilience.md).
     """
     app_kind = kind = detect_kind(fn)   # classify once: translate() runs
     res = resources or getattr(fn, "__resources__", None) or ResourceSpec()
@@ -69,7 +76,10 @@ def translate(fn: Callable, args: tuple, kwargs: dict,
     uid = new_uid("task")
     task = TaskRecord(
         uid=uid, kind=kind, fn=body, args=args, kwargs=kwargs,
-        resources=res, max_retries=max_retries,
+        resources=res,
+        max_retries=(retry_policy.max_retries if retry_policy is not None
+                     else max_retries),
+        retry_policy=retry_policy,
         app_kind=app_kind,
         sticky=res.sticky,
         affinity=tuple(dict.fromkeys(aff)) if aff else (),

@@ -386,6 +386,18 @@ class ProcessTransport(_PoolBase):
         with self._pcond:
             return self._total
 
+    def worker_pids(self, busy_only: bool = False) -> list:
+        """Pids of live worker processes — the chaos harness's worker-kill
+        and task-hang schedules pick their victims here (its presence is
+        also how the FaultInjector recognizes a proc-transport pilot).
+        ``busy_only`` restricts to workers currently driving a task."""
+        with self._pcond:
+            live = [w for w in self._all if w.proc.is_alive()]
+            if busy_only:
+                idle = {id(w) for w in self._free}
+                live = [w for w in live if id(w) not in idle]
+            return [w.proc.pid for w in live]
+
     def shutdown(self):
         super().shutdown()              # poison the local threads first
         with self._pcond:

@@ -20,7 +20,8 @@ import pytest
 
 from repro.core import (DataFlowKernel, LocalityAware, Pilot,
                         PilotDescription, PilotPool, PoolScaler,
-                        ResourceSpec, RPEXExecutor, ScalerConfig, TaskState,
+                        ResourceSpec, RetryPolicy, RPEXExecutor,
+                        ScalerConfig, TaskState,
                         overhead_from_events, python_app, translate)
 
 
@@ -740,3 +741,102 @@ def test_proc_worker_death_retry_path_fires(tmp_path):
         assert t.retries == 1
     finally:
         p.close()
+
+
+# --------------------------- pilot failure domains ------------------------ #
+
+@pytest.mark.timeout(120)
+def test_scaler_replaces_lost_pilot_mid_burst():
+    """A pilot crashing under a live burst is declared LOST by heartbeat
+    supervision, its work re-routes, and the PoolScaler's replace-on-loss
+    trigger restores the pool's capacity from the template — bypassing
+    the spawn cooldown, since loss is not load."""
+    pool = PilotPool([PilotDescription(n_slots=2, name="rla",
+                                       straggler_factor=1e9),
+                      PilotDescription(n_slots=2, name="rlb",
+                                       straggler_factor=1e9)],
+                     heartbeat_timeout_s=0.5)
+    scaler = PoolScaler(pool, ScalerConfig(
+        template=PilotDescription(n_slots=2, name="spare",
+                                  straggler_factor=1e9),
+        min_pilots=2, max_pilots=3, interval_s=0.05,
+        scale_up_wait_s=1e9, scale_down_idle_s=1e9,
+        spawn_cooldown_s=1e9)).start()
+    from repro.core import TaskManager
+    tmgr = TaskManager(pool)
+    try:
+        a, b = pool.pilots
+        pol = RetryPolicy(max_retries=4, backoff_base_s=0.0)
+        results = []
+        lock = threading.Lock()
+
+        def cb(rec):
+            with lock:
+                results.append(rec)
+
+        tasks = [translate(lambda i=i: time.sleep(0.05) or i, (), {},
+                           retry_policy=pol) for i in range(24)]
+        tmgr.submit_bulk(tasks, done_cb=cb)
+        time.sleep(0.1)                       # burst in flight everywhere
+        a.agent.inject_crash()
+        assert tmgr.wait(timeout=60), "burst never drained after the loss"
+
+        assert len(results) == 24
+        assert all(r.state == TaskState.DONE for r in results)
+        lost = [e for e in pool.events() if e["event"] == "PILOT_LOST"]
+        assert lost and lost[0]["pilot"] == a.uid
+        replaced = [d for d in scaler.decisions
+                    if d["action"] == "replace_lost"]
+        assert replaced and replaced[0]["lost"] == a.uid
+        # the replacement is a live member; the lost pilot is not
+        assert a not in pool.pilots
+        assert any(p.desc.name.startswith("spare") for p in pool.active())
+    finally:
+        scaler.stop()
+        pool.close()
+
+
+@pytest.mark.timeout(120)
+def test_checkpoint_readopted_from_lost_pilot_resumes_on_survivor():
+    """A RUNNING checkpointable task on a crashed pilot re-adopts its
+    last durable snapshot onto the survivor (ensure_checkpoint moves it)
+    and resumes at step > 0 — the pilot died, the work did not."""
+    pool = PilotPool([PilotDescription(n_slots=1, name="cka",
+                                       straggler_factor=1e9),
+                      PilotDescription(n_slots=1, name="ckb",
+                                       straggler_factor=1e9)],
+                     steal=False, heartbeat_timeout_s=0.5)
+    try:
+        a, b = pool.pilots
+
+        def stepper(n, step_s, ckpt=None):
+            got = ckpt.restore()
+            start = got[0] + 1 if got is not None else 0
+            for step in range(start, n):
+                time.sleep(step_s)
+                ckpt.save(step, step)
+            return {"start": start}
+
+        t = translate(stepper, (10, 0.08), {},
+                      ResourceSpec(checkpointable=True))
+        t.transition(TaskState.TRANSLATED, a.store)
+        box = {}
+        done = threading.Event()
+        a.agent.submit(t, done_cb=lambda rec: (box.update(r=rec),
+                                               done.set()))
+        deadline = time.monotonic() + 15
+        while a.ckpt.step(t.ckpt_key) is None:
+            assert time.monotonic() < deadline, "no checkpoint saved"
+            time.sleep(0.02)
+        a.agent.inject_crash()                # heartbeat monitor takes over
+
+        assert done.wait(60), "recovered task never completed"
+        rec = box["r"]
+        assert rec.state == TaskState.DONE
+        assert rec.pilot_uid == b.uid         # resumed on the survivor
+        assert rec.result["start"] > 0        # from the snapshot, not 0
+        assert rec.retries == 0               # re-adoption costs no retry
+        lost = [e for e in pool.events() if e["event"] == "PILOT_LOST"]
+        assert lost and lost[0]["reason"] == "crash"
+    finally:
+        pool.close()
