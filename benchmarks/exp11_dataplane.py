@@ -1,0 +1,213 @@
+"""Experiment 11: the data plane — zero-copy result delivery and
+byte-weighted placement (docs/dataplane.md).
+
+Part A — delivery overhead.  One proc-transport pilot runs a fan-out: a
+producer returns a multi-MB array and N consumers each read it.  With
+the data plane OFF (``data_plane=False``, no shm) that payload travels
+*by value*: pickled child->parent once for the result, then pickled
+parent->child again for every consumer's arguments — the PR-8 baseline.
+With the data plane ON the result is published once as an ObjectRef,
+consumers deref it zero-copy on the same pilot, and the proc transport
+ships the array through a ``multiprocessing.shared_memory`` segment
+instead of the pipe.  The per-edge result-delivery overhead is
+``(makespan - ideal compute) / edges``; the gate requires the OFF/ON
+ratio to clear ``--min-delivery-ratio``.
+
+Part B — placement.  Three small producers are pinned to pilot p0 and
+one large producer to pilot p1; a sink consumes all four.  Byte-weighted
+affinity (the default) follows the *largest* input to p1; the legacy
+uid-counted stamp sees one hint per producer pilot, ties, and
+first-of-equals lands the sink on p0 — next to kilobytes instead of the
+large array.  ``--require-placement`` gates both outcomes.
+
+Emits ``BENCH_dataplane.json`` at the repo root.
+"""
+from __future__ import annotations
+
+import argparse
+import concurrent.futures
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import (DataFlowKernel, LocalityAware, PilotDescription,
+                        ResourceSpec, RPEXExecutor, python_app)
+
+
+@python_app
+def produce(n_elems, compute_s):
+    time.sleep(compute_s)
+    return np.ones(n_elems, dtype=np.float64)
+
+
+@python_app
+def consume(x, compute_s):
+    time.sleep(compute_s)
+    return float(x[0]) + float(x[-1])
+
+
+# ----------------------- Part A: delivery overhead ----------------------- #
+
+def run_fanout(data_plane: bool, payload_mb: float, edges: int,
+               compute_s: float) -> dict:
+    """One measured fan-out: producer -> N consumers on a single
+    proc-transport pilot (slots=1, so compute serializes and the ideal
+    makespan is exact)."""
+    n_elems = int(payload_mb * 1024 * 1024) // 8
+    desc = PilotDescription(
+        name="dp", n_slots=1, transport="proc",
+        shm_threshold=(256 * 1024 if data_plane else None))
+    ex = RPEXExecutor(desc, steal=False, data_plane=data_plane)
+    try:
+        with DataFlowKernel(executors={"rpex": ex}):
+            # warm the worker (fork + numpy import) outside the timing
+            consume(produce(1024, 0.0), 0.0).result()
+
+            t0 = time.monotonic()
+            root = produce(n_elems, compute_s)
+            sinks = [consume(root, compute_s) for _ in range(edges)]
+            for f in sinks:
+                assert f.result(timeout=300) == 2.0
+            makespan = time.monotonic() - t0
+        ideal = (edges + 1) * compute_s
+        stats = ex.objectstore.stats() if ex.objectstore else {}
+        return {"makespan_s": makespan, "ideal_s": ideal,
+                "overhead_ms_per_edge": (makespan - ideal) * 1e3 / edges,
+                "objectstore": stats}
+    finally:
+        ex.shutdown()
+
+
+def measure_delivery(data_plane: bool, args) -> dict:
+    runs = [run_fanout(data_plane, args.payload_mb, args.edges,
+                       args.compute_ms / 1000.0)
+            for _ in range(max(1, args.repeats))]
+    best = min(runs, key=lambda r: r["overhead_ms_per_edge"])
+    return {**best, "runs": len(runs)}
+
+
+# ----------------------- Part B: placement routing ----------------------- #
+
+@python_app
+def small_produce():
+    return np.ones(64 * 1024 // 8, dtype=np.float64)
+
+
+@python_app
+def big_produce(n_elems):
+    return np.ones(n_elems, dtype=np.float64)
+
+
+@python_app
+def sink(big, *smalls):
+    return float(big.sum()) + sum(float(s.sum()) for s in smalls)
+
+
+def run_placement(byte_affinity: bool, payload_mb: float) -> dict:
+    """Pinned producers (3 small on p0, 1 large on p1), then a sink with
+    all four as inputs; which pilot the sink lands on is the measurement.
+    Producers drain first so routing sees idle, equal loads — the
+    affinity term alone decides."""
+    n_elems = int(payload_mb * 1024 * 1024) // 8
+    ex = RPEXExecutor([PilotDescription(name="p0", n_slots=4),
+                       PilotDescription(name="p1", n_slots=4)],
+                      steal=False,
+                      placement=LocalityAware(locality_weight=10.0))
+    try:
+        res_p0 = ResourceSpec(slots=1, cpu_only=True, sticky=True,
+                              affinity=("p0",))
+        res_p1 = ResourceSpec(slots=1, cpu_only=True, sticky=True,
+                              affinity=("p1",))
+        with DataFlowKernel(executors={"rpex": ex},
+                            byte_affinity=byte_affinity) as dfk:
+            smalls = [dfk.submit(small_produce.__wrapped_app__, (),
+                                 resources=res_p0) for _ in range(3)]
+            big = dfk.submit(big_produce.__wrapped_app__, (n_elems,),
+                             resources=res_p1)
+            concurrent.futures.wait(smalls + [big])
+            ex.drain(timeout=30.0)
+            s = dfk.submit(sink.__wrapped_app__, (big, *smalls))
+            s.result(timeout=120)
+            names = {p.uid: p.desc.name for p in ex.pool.pilots}
+            return {"sink_pilot": names.get(s.task.pilot_uid, "?"),
+                    "edge_bytes_total": dfk.edge_bytes_total,
+                    "bytes_moved": (ex.objectstore.stats()["bytes_moved"]
+                                    if ex.objectstore else None)}
+    finally:
+        ex.shutdown()
+
+
+# --------------------------------- main ---------------------------------- #
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--payload-mb", type=float, default=4.0,
+                    help="producer result size (the >= 1 MB edge payload)")
+    ap.add_argument("--edges", type=int, default=12,
+                    help="consumers reading the producer's result")
+    ap.add_argument("--compute-ms", type=float, default=10.0)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--min-delivery-ratio", type=float, default=0.0,
+                    help="exit nonzero if OFF/ON per-edge delivery "
+                         "overhead falls below this (0 = report only)")
+    ap.add_argument("--require-placement", action="store_true",
+                    help="exit nonzero unless byte-weighted affinity "
+                         "routes the sink to the large producer's pilot "
+                         "AND uid counting demonstrably does not")
+    ap.add_argument("--out", default=str(Path(__file__).resolve()
+                                         .parent.parent
+                                         / "BENCH_dataplane.json"))
+    args = ap.parse_args(argv)
+
+    results = {"config": {
+        "payload_mb": args.payload_mb, "edges": args.edges,
+        "compute_ms": args.compute_ms, "repeats": args.repeats}}
+
+    print(f"# fan-out: 1 producer ({args.payload_mb:g} MB result) -> "
+          f"{args.edges} consumers, proc transport, 1 slot")
+    off = measure_delivery(False, args)
+    on = measure_delivery(True, args)
+    ratio = (off["overhead_ms_per_edge"]
+             / max(1e-9, on["overhead_ms_per_edge"]))
+    results["delivery"] = {"off": off, "on": on, "ratio": ratio}
+    for name, r in (("pickled (off)", off), ("data plane (on)", on)):
+        print(f"  {name:16s}: makespan {r['makespan_s']:.3f}s "
+              f"(ideal {r['ideal_s']:.3f}s), "
+              f"{r['overhead_ms_per_edge']:.2f} ms/edge")
+    print(f"  per-edge delivery overhead reduction: {ratio:.1f}x")
+
+    print(f"# placement: 3 small producers @p0, 1 large @p1, one sink")
+    byte_run = run_placement(True, args.payload_mb)
+    uid_run = run_placement(False, args.payload_mb)
+    byte_ok = byte_run["sink_pilot"] == "p1"
+    uid_wrong = uid_run["sink_pilot"] != "p1"
+    results["placement"] = {
+        "byte_weighted": byte_run, "uid_counted": uid_run,
+        "byte_follows_largest": byte_ok,
+        "uid_misroutes": uid_wrong}
+    print(f"  byte-weighted sink pilot: {byte_run['sink_pilot']} "
+          f"(bytes_moved={byte_run['bytes_moved']})")
+    print(f"  uid-counted  sink pilot: {uid_run['sink_pilot']} "
+          f"(bytes_moved={uid_run['bytes_moved']})")
+
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(results, indent=2))
+    print(f"wrote {out}")
+
+    if args.min_delivery_ratio and ratio < args.min_delivery_ratio:
+        raise SystemExit(
+            f"REGRESSION: data-plane delivery overhead reduction "
+            f"{ratio:.2f}x < required {args.min_delivery_ratio:.2f}x")
+    if args.require_placement and not (byte_ok and uid_wrong):
+        raise SystemExit(
+            f"REGRESSION: placement gate — byte-weighted landed on "
+            f"{byte_run['sink_pilot']!r} (want 'p1'), uid-counted on "
+            f"{uid_run['sink_pilot']!r} (want != 'p1')")
+    return results
+
+
+if __name__ == "__main__":
+    main()

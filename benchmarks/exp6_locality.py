@@ -18,6 +18,12 @@ beats the affinity penalty — so chains stay put and hops collapse, while
 the makespan stays at the balanced optimum (the chains were spread by
 their roots; locality never piles work onto one pilot).
 
+Each intermediate is a real ndarray (``--payload-kb``, above the object
+store's publish threshold), so every cross-pilot hop is also a counted
+object-store fetch: ``bytes_moved`` (docs/dataplane.md) is reported
+alongside the hop count — the same reduction, but in the unit the cost
+model prices (bytes over a bandwidth, not edge crossings).
+
 Emits ``BENCH_locality.json`` at the repo root.  ``--min-hop-ratio``
 gates the hop reduction (LeastLoaded hops / LocalityAware hops) and
 ``--max-makespan-ratio`` gates against a locality-induced makespan
@@ -30,26 +36,29 @@ import json
 import time
 from pathlib import Path
 
+import numpy as np
+
 from repro.core import (DataFlowKernel, PilotDescription, RPEXExecutor,
                         python_app)
 
 
 def run_chains(placement: str, n_chains: int, depth: int,
-               producer_s: float, task_s: float) -> dict:
+               producer_s: float, task_s: float, payload_kb: float) -> dict:
     """One measured run: build the chains, wait them out, count hops."""
     rpex = RPEXExecutor([PilotDescription(n_slots=2, name="p0"),
                          PilotDescription(n_slots=2, name="p1")],
                         placement=placement)
+    n_elems = max(1, int(payload_kb * 1024) // 8)
     try:
         @python_app
         def produce(c):
             time.sleep(producer_s)
-            return c
+            return np.full(n_elems, float(c))
 
         @python_app
         def consume(x):
             time.sleep(task_s)
-            return x + 1
+            return x + 1.0              # frozen input: the add allocates
 
         t0 = time.monotonic()
         with DataFlowKernel(executors={"rpex": rpex}):
@@ -60,7 +69,8 @@ def run_chains(placement: str, n_chains: int, depth: int,
                     futs.append(consume(futs[-1]))
                 chains.append(futs)
             for c, futs in enumerate(chains):
-                assert futs[-1].result(timeout=120) == c + depth - 1
+                out = futs[-1].result(timeout=120)
+                assert float(out[0]) == c + depth - 1
         makespan = time.monotonic() - t0
 
         hops = edges = 0
@@ -74,23 +84,28 @@ def run_chains(placement: str, n_chains: int, depth: int,
                 hops += src != dst
         stolen = sum(1 for e in rpex.pool.events()
                      if e["event"] == "STOLEN")
+        stats = rpex.objectstore.stats() if rpex.objectstore else {}
         return {"makespan_s": makespan, "hops": hops, "edges": edges,
-                "stolen": stolen, "tasks_per_pilot": per_pilot}
+                "stolen": stolen, "tasks_per_pilot": per_pilot,
+                "bytes_moved": stats.get("bytes_moved", 0),
+                "bytes_published": stats.get("bytes_published", 0)}
     finally:
         rpex.shutdown()
 
 
 def measure(placement: str, args) -> dict:
-    """Best-of-N makespan (container scheduling noise), hops summed over
-    every repeat so one lucky run cannot carry the gate."""
+    """Best-of-N makespan (container scheduling noise), hops and bytes
+    summed over every repeat so one lucky run cannot carry the gate."""
     runs = [run_chains(placement, args.chains, args.depth,
-                       args.producer_ms / 1000.0, args.task_ms / 1000.0)
+                       args.producer_ms / 1000.0, args.task_ms / 1000.0,
+                       args.payload_kb)
             for _ in range(max(1, args.repeats))]
     best = min(runs, key=lambda r: r["makespan_s"])
     return {**best,
             "hops_total": sum(r["hops"] for r in runs),
             "edges_total": sum(r["edges"] for r in runs),
             "stolen_total": sum(r["stolen"] for r in runs),
+            "bytes_moved_total": sum(r["bytes_moved"] for r in runs),
             "runs": len(runs)}
 
 
@@ -101,6 +116,9 @@ def main(argv=None):
                     help="tasks per chain (1 producer + depth-1 consumers)")
     ap.add_argument("--producer-ms", type=float, default=60.0)
     ap.add_argument("--task-ms", type=float, default=25.0)
+    ap.add_argument("--payload-kb", type=float, default=128.0,
+                    help="intermediate ndarray size; above the publish "
+                         "threshold so hops are also counted bytes")
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--min-hop-ratio", type=float, default=0.0,
                     help="exit nonzero if LeastLoaded hops / LocalityAware "
@@ -117,7 +135,7 @@ def main(argv=None):
     results = {"config": {
         "chains": args.chains, "depth": args.depth,
         "producer_ms": args.producer_ms, "task_ms": args.task_ms,
-        "repeats": args.repeats}}
+        "payload_kb": args.payload_kb, "repeats": args.repeats}}
 
     print(f"# {args.chains} producer/consumer chains x depth {args.depth}, "
           f"2 pilots x 2 slots")
@@ -125,16 +143,21 @@ def main(argv=None):
     loc = measure("locality", args)
     hop_ratio = least["hops_total"] / max(1, loc["hops_total"])
     makespan_ratio = loc["makespan_s"] / least["makespan_s"]
+    bytes_ratio = (least["bytes_moved_total"]
+                   / max(1, loc["bytes_moved_total"]))
     results["least_loaded"] = least
     results["locality"] = loc
     results["hop_ratio"] = hop_ratio
     results["makespan_ratio"] = makespan_ratio
+    results["bytes_moved_ratio"] = bytes_ratio
 
     for name, r in (("least-loaded", least), ("locality", loc)):
         print(f"  {name:13s}: makespan {r['makespan_s']:.3f}s, "
-              f"hops {r['hops_total']}/{r['edges_total']} "
+              f"hops {r['hops_total']}/{r['edges_total']}, "
+              f"{r['bytes_moved_total'] / 1e6:.1f} MB moved "
               f"(stolen={r['stolen_total']})")
-    print(f"  cross-pilot hop reduction: {hop_ratio:.1f}x  "
+    print(f"  cross-pilot hop reduction: {hop_ratio:.1f}x, "
+          f"bytes moved: {bytes_ratio:.1f}x  "
           f"(makespan ratio {makespan_ratio:.2f})")
 
     out = Path(args.out)

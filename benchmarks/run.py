@@ -46,7 +46,18 @@ _BENCH_HEADLINES = {
         (("locality", "hops_total"), "locality hops", "{:d}"),
         (("least_loaded", "hops_total"), "least-loaded hops", "{:d}"),
         (("hop_ratio",), "hop reduction", "{:.1f}x"),
+        (("bytes_moved_ratio",), "bytes moved", "{:.1f}x"),
         (("makespan_ratio",), "makespan ratio", "{:.2f}"),
+    ],
+    "BENCH_dataplane.json": [
+        (("delivery", "ratio"), "delivery overhead", "{:.1f}x"),
+        (("delivery", "on", "overhead_ms_per_edge"), "dataplane ms/edge",
+         "{:.2f}"),
+        (("delivery", "off", "overhead_ms_per_edge"), "pickled ms/edge",
+         "{:.2f}"),
+        (("placement", "byte_follows_largest"), "byte-affinity routes",
+         "{}"),
+        (("placement", "uid_misroutes"), "uid misroutes", "{}"),
     ],
     "BENCH_preempt.json": [
         (("recovery", "ratio"), "ckpt recovery", "{:.2f}x"),

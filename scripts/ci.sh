@@ -18,7 +18,7 @@ fi
 # runtime micro-benchmark smoke (fast settings; the full runs are
 # `python benchmarks/exp3_throughput.py` / `exp5_statepath.py` /
 # `exp6_locality.py` / `exp7_preempt.py` / `exp8_procpool.py` /
-# `exp9_costmodel.py` / `exp10_resilience.py`)
+# `exp9_costmodel.py` / `exp10_resilience.py` / `exp11_dataplane.py`)
 if [[ "${CI_BENCH:-0}" == "1" ]]; then
     python benchmarks/exp3_throughput.py --tasks 200 --stream-tasks 50
     python benchmarks/exp5_statepath.py --tasks 500 --records 5000 \
@@ -33,4 +33,6 @@ if [[ "${CI_BENCH:-0}" == "1" ]]; then
         --min-makespan-ratio 1.3
     python benchmarks/exp10_resilience.py --tasks 60 --ckpt-steps 8 \
         --repeats 1 --max-degradation-ratio 5
+    python benchmarks/exp11_dataplane.py --payload-mb 2 --edges 6 \
+        --repeats 1 --require-placement
 fi

@@ -5,6 +5,7 @@ Public API:
     RPEXExecutor, PilotDescription                   (the integration)
     PilotManager, TaskManager, Agent, SlotScheduler  (RP side)
     PlacementPolicy, LeastLoaded, LocalityAware      (placement layer)
+    ObjectStore, ObjectRef                           (data plane)
 """
 from .agent import Agent
 from .apps import bash_app, python_app, spmd_app
@@ -14,12 +15,14 @@ from .executors import Executor, ParslTask, ThreadPoolExecutor
 from .faults import FaultInjector, PilotLost, SlotFailure
 from .futures import (AppFuture, ResourceSpec, RetryPolicy, TaskRecord,
                       TaskState, model_kind, new_uid)
+from .objectstore import (BlobLeaf, ObjectRef, ObjectStore, estimate_size,
+                          materialize)
 from .pilot import (Pilot, PilotDescription, PilotManager, PilotPool,
                     PoolScaler, ScalerConfig, TaskManager)
 from .placement import (CostModelPolicy, LeastLoaded, LocalityAware,
                         PlacementPolicy, affinity_match, filter_healthy,
                         prefer_free_slots, prefer_specialized,
-                        resolve_policy)
+                        remote_bytes, resolve_policy)
 from .rpex import RPEXExecutor
 from .scheduler import SlotScheduler
 from .spmd_executor import SPMDFunctionExecutor
@@ -31,11 +34,12 @@ from .transport import (InprocTransport, ProcessTransport, WorkerDied,
                         make_transport)
 
 __all__ = [
-    "Agent", "AppFuture", "Checkpoint", "CheckpointStore",
+    "Agent", "AppFuture", "BlobLeaf", "Checkpoint", "CheckpointStore",
     "CostModelPolicy",
     "DataFlowKernel", "Executor", "FaultInjector", "InprocTransport",
     "LeastLoaded",
-    "LocalityAware", "ParslTask", "Pilot", "PilotDescription",
+    "LocalityAware", "ObjectRef", "ObjectStore", "ParslTask", "Pilot",
+    "PilotDescription",
     "PilotLost",
     "PilotManager", "PilotPool", "PlacementPolicy", "PoolScaler",
     "ProcessTransport", "RPEXExecutor", "RemoteError", "RemoteTraceback",
@@ -45,9 +49,11 @@ __all__ = [
     "TaskPreempted", "TaskRecord", "TaskState",
     "ThreadPoolExecutor", "UnserializableResult", "WorkerDied",
     "affinity_match", "bash_app", "bind_future",
-    "current_dfk", "detect_kind", "filter_healthy", "make_transport",
+    "current_dfk", "detect_kind", "estimate_size", "filter_healthy",
+    "make_transport", "materialize",
     "model_kind", "new_uid",
     "overhead_from_events",
     "prefer_free_slots", "prefer_specialized", "python_app",
+    "remote_bytes",
     "resolve_policy", "spmd_app", "translate", "union_intervals",
 ]

@@ -74,6 +74,7 @@ from .checkpoint import Checkpoint, CheckpointStore, TaskPreempted
 from .faults import PilotLost, SlotFailure
 from .futures import (TERMINAL, ResourceSpec, TaskRecord, TaskState,
                       chain_attempt_errors, model_kind, new_uid)
+from .objectstore import materialize
 from .scheduler import SlotScheduler
 from .spmd_executor import SPMDFunctionExecutor
 from .store import StateStore
@@ -154,6 +155,11 @@ class Agent:
         # pilot (called outside all locks, like idle_cb)
         self.reroute_cb: Optional[
             Callable[[TaskRecord, Optional[Callable]], None]] = None
+        # pool-wired data plane (docs/dataplane.md): with a store attached,
+        # ObjectRef inputs are materialized here — on the *executing*
+        # pilot, so transfer bytes are attributed correctly even after a
+        # steal or retry — and large results are published as refs
+        self.objectstore = None
 
         self._accepting = True      # False once draining/stopped: submit
                                     # refuses instead of heaping tasks no
@@ -738,6 +744,16 @@ class Agent:
     # ---------------------------- execution ----------------------------- #
     def _run_task(self, task: TaskRecord):
         task.transition(TaskState.LAUNCHING, self.store)
+        if self.objectstore is not None:
+            # deref ObjectRef inputs on the executing pilot: same-pilot
+            # edges hand over the in-memory object (zero copies),
+            # cross-pilot edges fetch once, cache, and count bytes_moved.
+            # The overwrite is deliberate — a later retry re-ships values,
+            # which is correct (the ref may be GC'd by then).
+            task.args = materialize(task.args, self.objectstore,
+                                    task.pilot_uid)
+            task.kwargs = materialize(task.kwargs, self.objectstore,
+                                      task.pilot_uid)
         ctx = None
         if task.checkpointable:
             ctx = Checkpoint(self.ckpt, task.ckpt_key or task.uid)
@@ -769,6 +785,12 @@ class Agent:
                     with self._cv:
                         if self._ckpt_ctxs.get(task.uid) is ctx:
                             del self._ckpt_ctxs[task.uid]
+            if self.objectstore is not None:
+                # publish once: at/above the store threshold the result
+                # becomes an ObjectRef owned by this pilot; consumers
+                # deref lazily (docs/dataplane.md)
+                result = self.objectstore.maybe_publish(result,
+                                                        task.pilot_uid)
             task.result = result
             self._finish(task, TaskState.DONE, dt)
         except TaskPreempted:
@@ -1069,6 +1091,7 @@ class Agent:
             args=t.args, kwargs=t.kwargs, resources=t.resources,
             replica_of=t.uid, res_kind=t.res_kind, app_kind=t.app_kind,
             pilot_uid=t.pilot_uid, sticky=t.sticky, affinity=t.affinity,
+            affinity_bytes=t.affinity_bytes,
             max_retries=t.max_retries,
             checkpointable=t.checkpointable,
             ckpt_key=t.ckpt_key or t.uid)

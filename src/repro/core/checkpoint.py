@@ -42,7 +42,13 @@ import threading
 from pathlib import Path
 from typing import Any, Dict, Optional, Tuple
 
+from .objectstore import BlobLeaf
 from .store import StateStore
+
+try:
+    import numpy as _np
+except ImportError:                     # pragma: no cover - numpy is a
+    _np = None                          # hard dep everywhere else
 
 _SAFE = re.compile(r"[^A-Za-z0-9._-]")
 
@@ -66,6 +72,11 @@ class CheckpointStore:
 
     def __init__(self, store: StateStore):
         self.store = store
+        self.objectstore = None         # pool-wired data plane: large
+                                        # ndarray leaves persist as
+                                        # content-addressed BlobLeaf refs
+                                        # deduped against result spills
+                                        # (docs/dataplane.md)
         self._lock = threading.Lock()
         # key -> {"step": int, "state": Any (if in memory), "path": str?}
         self._latest: Dict[str, dict] = {}
@@ -156,8 +167,9 @@ class CheckpointStore:
         try:
             with open(path, "rb") as fh:
                 state = pickle.load(fh)
-        except Exception:  # noqa: BLE001 — unreadable payload: no resume
-            return None
+            state = self._rehydrate(state)
+        except Exception:  # noqa: BLE001 — unreadable payload (or a
+            return None    # missing leaf blob): no resume
         with self._lock:
             cur = self._latest.get(key)
             if cur is not None and cur["step"] == step:
@@ -217,6 +229,7 @@ class CheckpointStore:
         tmp = self.dir / f"{name}.{threading.get_ident()}.tmp"
         final = self.dir / name
         try:
+            state = self._dehydrate(state)
             with open(tmp, "wb") as fh:
                 pickle.dump(state, fh)
                 fh.flush()
@@ -237,6 +250,63 @@ class CheckpointStore:
                 os.unlink(path)
             except OSError:
                 pass
+
+    # ------------------------- per-leaf blobs --------------------------- #
+    def _dehydrate(self, state: Any, _depth: int = 0) -> Any:
+        """Replace large ndarray leaves with content-addressed BlobLeaf
+        refs through the pool object store: the pickled skeleton stays
+        small, and a leaf byte-identical to a published result (or
+        repeated across steps/keys) lands on disk exactly once.  Without
+        a wired object store this is the identity (the PR-7 whole-pickle
+        path)."""
+        store = self.objectstore
+        if store is None or _np is None:
+            return state
+        if (isinstance(state, _np.ndarray) and not state.dtype.hasobject
+                and state.nbytes >= store.threshold):
+            try:
+                sha, size = store.put_blob(state)
+            except Exception:  # noqa: BLE001 — unspillable leaf: inline
+                return state
+            return BlobLeaf(sha, size,
+                            f"ndarray[{state.dtype}]{state.shape}")
+        if _depth >= 3:
+            return state
+        if isinstance(state, dict):
+            return {k: self._dehydrate(v, _depth + 1)
+                    for k, v in state.items()}
+        if isinstance(state, list):
+            return [self._dehydrate(v, _depth + 1) for v in state]
+        if isinstance(state, tuple):
+            out = [self._dehydrate(v, _depth + 1) for v in state]
+            if hasattr(state, "_fields"):       # NamedTuple
+                return type(state)(*out)
+            return tuple(out)
+        return state
+
+    def _rehydrate(self, state: Any, _depth: int = 0) -> Any:
+        """Inverse of ``_dehydrate``: load BlobLeaf refs back from the
+        object store's blob namespace.  A missing blob raises — the
+        caller treats the checkpoint as unusable."""
+        if isinstance(state, BlobLeaf):
+            if self.objectstore is None:
+                raise RuntimeError(
+                    "checkpoint contains BlobLeaf refs but no object "
+                    "store is wired")
+            return self.objectstore.get_blob(state.sha)
+        if _depth >= 3:
+            return state
+        if isinstance(state, dict):
+            return {k: self._rehydrate(v, _depth + 1)
+                    for k, v in state.items()}
+        if isinstance(state, list):
+            return [self._rehydrate(v, _depth + 1) for v in state]
+        if isinstance(state, tuple):
+            out = [self._rehydrate(v, _depth + 1) for v in state]
+            if hasattr(state, "_fields"):       # NamedTuple
+                return type(state)(*out)
+            return tuple(out)
+        return state
 
 
 class Checkpoint:

@@ -51,6 +51,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 from .executors import Executor, ParslTask, ThreadPoolExecutor
 from .futures import (AppFuture, ResourceSpec, RetryPolicy, TaskRecord,
                       TaskState, new_uid)
+from .objectstore import ObjectRef, estimate_size, materialize
 
 _current: List["DataFlowKernel"] = []
 
@@ -71,9 +72,12 @@ def _find_futures(obj, out=None):
 
 def _resolve(obj):
     """Substitute resolved results for futures, preserving structure
-    (including NamedTuples, e.g. optimizer states)."""
+    (including NamedTuples, e.g. optimizer states).  A future holding a
+    published result contributes its *ObjectRef*, not the payload — the
+    edge ships a handle, and the executing pilot derefs it there (where
+    cross-pilot bytes are attributable)."""
     if isinstance(obj, AppFuture):
-        return obj.quick_result()
+        return obj.raw_result()
     if isinstance(obj, list):
         return [_resolve(x) for x in obj]
     if isinstance(obj, tuple):
@@ -108,16 +112,25 @@ class DataFlowKernel:
     def __init__(self, executors: Optional[Dict[str, Executor]] = None,
                  default_executor: Optional[str] = None,
                  bulk: bool = False, bulk_window: float = 0.002,
-                 run_id: Optional[str] = None):
+                 run_id: Optional[str] = None,
+                 byte_affinity: bool = True):
         self.executors = executors or {"threads": ThreadPoolExecutor()}
         self.default_executor = default_executor or next(iter(self.executors))
         self.bulk = bulk
         self.bulk_window = bulk_window
         self.run_id = run_id
+        self.byte_affinity = byte_affinity
+                                    # weight data-affinity by input bytes
+                                    # (False = legacy uid counting — the
+                                    # exp11 placement baseline)
         self._lock = threading.Lock()
         self._invocation_idx: Dict[str, int] = {}
         self.tasks: Dict[str, TaskRecord] = {}   # DAG nodes
         self.edges: List[Tuple[str, str]] = []   # (producer, consumer)
+        self.edge_bytes: List[Tuple[str, str, int]] = []
+                                    # (producer uid, consumer uid, bytes)
+                                    # per dataflow edge at launch time
+        self.edge_bytes_total = 0
         self.t_start = time.monotonic()
         # restart observability: keys that were interrupted last run and
         # carry a checkpoint — their tasks re-execute but resume from the
@@ -242,13 +255,55 @@ class DataFlowKernel:
             # data-affinity hint: the pilots that produced this task's
             # inputs (every input is resolved by now, so each producer's
             # pilot binding is final — stolen tasks report the pilot that
-            # actually ran them)
-            affinity = tuple(dict.fromkeys(
-                p for p in (getattr(f.task, "pilot_uid", None)
-                            for f in inputs) if p))
+            # actually ran them), weighted by input bytes so placement can
+            # follow the *largest* input (docs/dataplane.md)
+            per_pilot: Dict[str, int] = {}
+            ref_oids: List[Tuple[Any, str]] = []
+            edge_recs: List[Tuple[str, str, int]] = []
+            for f in inputs:
+                raw = f.raw_result()
+                if isinstance(raw, ObjectRef):
+                    size = raw.size
+                    if raw._store is not None:
+                        # one consumer edge per input occurrence: released
+                        # when this consumer's future completes, driving
+                        # the store's DONE-event ref-count GC
+                        ref_oids.append((raw._store, raw.oid))
+                else:
+                    size = estimate_size(raw)
+                puid = getattr(f.task, "pilot_uid", None)
+                if puid:
+                    per_pilot[puid] = per_pilot.get(puid, 0) + size
+                edge_recs.append((f.task.uid, node.uid, size))
+            if edge_recs:
+                with self._lock:
+                    self.edge_bytes.extend(edge_recs)
+                    self.edge_bytes_total += sum(s for _, _, s in edge_recs)
+            if self.byte_affinity:
+                affinity = tuple(sorted(per_pilot, key=per_pilot.get,
+                                        reverse=True))
+                affinity_bytes = per_pilot or None
+            else:
+                affinity = tuple(dict.fromkeys(
+                    p for p in (getattr(f.task, "pilot_uid", None)
+                                for f in inputs) if p))
+                affinity_bytes = None
+            for s, oid in ref_oids:
+                s.add_consumers(oid)
+            if ref_oids:
+                def _release(_f, _refs=tuple(ref_oids)):
+                    for s, oid in _refs:
+                        s.release(oid)
+                future.add_done_callback(_release)
+            if not getattr(self.executors[label], "resolves_refs", False):
+                # executors without a data plane (e.g. the thread-pool
+                # baseline) get payloads, not handles
+                r_args = materialize(r_args, None)
+                r_kwargs = materialize(r_kwargs, None)
             pt = ParslTask(fn, r_args, r_kwargs, node.resources, retries, key,
                            executor=label, affinity=affinity,
-                           retry_policy=retry_policy)
+                           retry_policy=retry_policy,
+                           affinity_bytes=affinity_bytes)
             node.transition(TaskState.TRANSLATED)
             return label, pt, future
 

@@ -19,17 +19,19 @@ class ParslTask:
     recorded by the dep manager for locality-aware placement)."""
 
     __slots__ = ("fn", "args", "kwargs", "resources", "retries", "key",
-                 "executor", "affinity", "retry_policy")
+                 "executor", "affinity", "affinity_bytes", "retry_policy")
 
     def __init__(self, fn, args, kwargs, resources=None, retries=0,
                  key: Optional[str] = None, executor: Optional[str] = None,
-                 affinity: Tuple[str, ...] = (), retry_policy=None):
+                 affinity: Tuple[str, ...] = (), retry_policy=None,
+                 affinity_bytes=None):
         self.fn, self.args, self.kwargs = fn, args, kwargs
         self.resources = resources
         self.retries = retries
         self.key = key
         self.executor = executor
         self.affinity = affinity
+        self.affinity_bytes = affinity_bytes   # {producer pilot: bytes}
         self.retry_policy = retry_policy
 
 

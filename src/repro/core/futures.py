@@ -22,6 +22,8 @@ from dataclasses import dataclass, field
 from enum import Enum
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from .objectstore import ObjectRef
+
 
 class TaskState(str, Enum):
     NEW = "NEW"
@@ -205,6 +207,13 @@ class TaskRecord:
     affinity: Tuple[str, ...] = ()  # data-affinity stamp (translator):
                                     # producer pilots + ResourceSpec hints;
                                     # scored by LocalityAware placement
+    affinity_bytes: Optional[Dict[str, int]] = None
+                                    # byte-weighted affinity (DFK dep
+                                    # manager): input bytes per producer
+                                    # pilot — placement follows the
+                                    # *largest* input, and CostModelPolicy
+                                    # prices the non-local remainder as
+                                    # transfer seconds (docs/dataplane.md)
     checkpointable: bool = False    # translator stamp of the ResourceSpec
                                     # flag: body takes a ``ckpt`` context
     ckpt_key: Optional[str] = None  # checkpoint identity: the uid by
@@ -243,8 +252,35 @@ class AppFuture(Future):
         self._quick: Optional[Tuple[Any]] = None
 
     def set_result(self, result):
+        if isinstance(result, ObjectRef):
+            # published result: the handle is the stored value; deref is
+            # lazy (first result() call) and the materialized object then
+            # takes over the lock-free stash
+            super().set_result(result)
+            return
         self._quick = (result,)
         super().set_result(result)
+
+    def result(self, timeout=None):
+        q = self._quick
+        if q is not None:
+            return q[0]
+        r = super().result(timeout)
+        if isinstance(r, ObjectRef):
+            val = r.deref()         # client-side read: uncounted bytes
+            self._quick = (val,)
+            return val
+        return r
+
+    def raw_result(self):
+        """Ref-or-value of a completed future: the DFK resolves consumer
+        args through this so edges ship handles, not payloads — the
+        actual deref happens on the *executing* pilot, where cross-pilot
+        bytes are attributable.  Blocks like result() if not yet done."""
+        q = self._quick
+        if q is not None:
+            return q[0]
+        return super().result()
 
     def quick_result(self):
         """Result without the condition round-trip — only valid once the

@@ -60,6 +60,7 @@ from .checkpoint import CheckpointStore
 from .faults import PilotLost
 from .futures import (ResourceSpec, TaskRecord, TaskState,
                       chain_attempt_errors, new_uid)
+from .objectstore import ObjectStore
 from .placement import PlacementPolicy, filter_healthy, resolve_policy
 from .scheduler import SlotScheduler
 from .spmd_executor import SPMDFunctionExecutor
@@ -93,6 +94,12 @@ class PilotDescription:
     worker_idle_s: float = 30.0       # pool threads idle longer than this
                                       # reap themselves (bounded pool)
     proc_start_method: Optional[str] = None  # "fork" (default) | "spawn"
+    shm_threshold: Optional[int] = 256 * 1024
+                                      # proc transport: ndarray args/results
+                                      # at/above this size cross the worker
+                                      # boundary via shared memory instead
+                                      # of the pickle pipe (None disables —
+                                      # the exp11 baseline)
 
 
 class Pilot:
@@ -116,7 +123,9 @@ class Pilot:
                            transport=make_transport(
                                desc.transport, desc.max_workers,
                                idle_s=desc.worker_idle_s,
-                               start_method=desc.proc_start_method)).start()
+                               start_method=desc.proc_start_method,
+                               shm_threshold=desc.shm_threshold)).start()
+        self.objectstore = None   # pool-wired data plane (docs/dataplane.md)
         self.t_start = time.monotonic()
         self.draining = False     # a draining pilot accepts no new work
         self.lost = False         # declared LOST by health supervision:
@@ -269,7 +278,8 @@ def _recovery_clone(task: TaskRecord) -> TaskRecord:
         worker_deaths=task.worker_deaths,
         res_kind=task.res_kind, app_kind=task.app_kind,
         pilot_uid=task.pilot_uid, sticky=task.sticky,
-        affinity=task.affinity, checkpointable=task.checkpointable,
+        affinity=task.affinity, affinity_bytes=task.affinity_bytes,
+        checkpointable=task.checkpointable,
         ckpt_key=task.ckpt_key, inproc_only=task.inproc_only)
 
 
@@ -291,13 +301,27 @@ class PilotPool:
                  preempt: bool = True,
                  policy: Union[None, str, PlacementPolicy] = None,
                  heartbeat_timeout_s: Optional[float] = None,
-                 heartbeat_interval_s: Optional[float] = None):
+                 heartbeat_interval_s: Optional[float] = None,
+                 data_plane: bool = True,
+                 data_threshold: Optional[int] = None):
         if pilots is None and descs is None:
             descs = [PilotDescription()]
         self.pilots: List[Pilot] = (list(pilots) if pilots is not None
                                     else [Pilot(d) for d in descs])
         if not self.pilots:
             raise ValueError("PilotPool needs at least one pilot")
+        # the pool-wide data plane (docs/dataplane.md): task results at or
+        # above the threshold are published once as ObjectRefs; spilled
+        # blobs live next to the first journaled pilot's journal so they
+        # survive restart with it
+        self.objectstore: Optional[ObjectStore] = None
+        if data_plane:
+            spill = next((p.desc.journal + ".obj" for p in self.pilots
+                          if p.desc.journal), None)
+            self.objectstore = ObjectStore(
+                spill_dir=spill,
+                **({"threshold": data_threshold}
+                   if data_threshold is not None else {}))
         self.retired: List[Pilot] = []
         self.steal_enabled = steal
         # preempt-and-migrate rides on the steal machinery: when a
@@ -332,6 +356,13 @@ class PilotPool:
             self._hb_thread.start()
 
     def _wire(self, p: Pilot):
+        if self.objectstore is not None:
+            # one shared store: agents publish/materialize through it, the
+            # journal spills through it, checkpoints dedupe against it
+            p.objectstore = self.objectstore
+            p.agent.objectstore = self.objectstore
+            p.store.objectstore = self.objectstore
+            p.ckpt.objectstore = self.objectstore
         if self.steal_enabled:
             p.agent.idle_cb = (
                 lambda free, _p=p: self.request_work(_p, free))
@@ -636,6 +667,7 @@ class PilotPool:
         orphans = pilot.drain(timeout=timeout)
         for task, cb in orphans:
             self._place_orphan(task, cb, pilot, reason="drain")
+        self._rehost_objects(pilot)
         return True
 
     # -------------------------- failure domains -------------------------- #
@@ -675,7 +707,28 @@ class PilotPool:
             self._place_orphan(task, cb, pilot, reason="pilot-lost")
         for task, cb in abandoned:
             self._recover_running(task, cb, pilot)
+        self._rehost_objects(pilot)
         return True
+
+    def _rehost_objects(self, departed: Pilot):
+        """Hand a departing pilot's live objects to a survivor.
+
+        Published results the departed pilot owned stay dereferenceable:
+        in-memory copies (and disk spills) live in the pool-shared store,
+        so re-hosting is an ownership transfer — the survivor becomes the
+        locality anchor for future byte-weighted placement and transfer
+        accounting (docs/dataplane.md)."""
+        if self.objectstore is None:
+            return
+        with self._lock:
+            survivor = next((p for p in self.pilots
+                             if not p.draining and not p.lost), None)
+        if survivor is not None:
+            n = self.objectstore.rehost(departed.uid, survivor.uid)
+            if n:
+                survivor.store.record_event(
+                    "OBJECTS_REHOSTED", pilot=survivor.uid,
+                    src=departed.uid, objects=n)
 
     def _recover_running(self, task: TaskRecord, cb: Optional[Callable],
                          src: Pilot):
@@ -814,6 +867,8 @@ class PilotPool:
             self._hb_thread.join(timeout=5.0)
         for p in ps:
             p.close()
+        if self.objectstore is not None:
+            self.objectstore.close()
 
 
 @dataclass
@@ -1018,11 +1073,15 @@ class PilotManager:
                       steal: bool = True,
                       preempt: bool = True,
                       policy: Union[None, str, PlacementPolicy] = None,
-                      heartbeat_timeout_s: Optional[float] = None
+                      heartbeat_timeout_s: Optional[float] = None,
+                      data_plane: bool = True,
+                      data_threshold: Optional[int] = None
                       ) -> PilotPool:
         pool = PilotPool(descs=descs, steal=steal, preempt=preempt,
                          policy=policy,
-                         heartbeat_timeout_s=heartbeat_timeout_s)
+                         heartbeat_timeout_s=heartbeat_timeout_s,
+                         data_plane=data_plane,
+                         data_threshold=data_threshold)
         for p in pool.pilots:
             self.pilots[p.uid] = p
         return pool

@@ -233,14 +233,37 @@ class LeastLoaded(PlacementPolicy):
 
 
 def affinity_match(task: "TaskRecord", pilot: "Pilot") -> float:
-    """Fraction of the task's affinity hints this pilot satisfies (by
-    pilot uid or description name); 0.0 for tasks with no affinity."""
+    """Fraction of the task's affinity this pilot satisfies (by pilot uid
+    or description name); 0.0 for tasks with no affinity.
+
+    With a ``TaskRecord.affinity_bytes`` stamp (the DFK dep manager's
+    {producer pilot: input bytes} map, docs/dataplane.md) the fraction is
+    *byte-weighted*: resident input bytes / total input bytes, so a
+    consumer follows its largest input rather than counting producers
+    equally — one 64 MB array outweighs any number of kilobyte configs.
+    Without the stamp, the legacy uid-counted fraction applies."""
+    name = pilot.desc.name
+    ab = getattr(task, "affinity_bytes", None)
+    if ab:
+        total = sum(ab.values())
+        if total > 0:
+            matched = sum(v for k, v in ab.items()
+                          if k == pilot.uid or (name and k == name))
+            return matched / total
     aff = getattr(task, "affinity", ()) or ()
     if not aff:
         return 0.0
-    name = pilot.desc.name
     hits = sum(1 for a in aff if a == pilot.uid or (name and a == name))
     return hits / len(aff)
+
+
+def remote_bytes(task: "TaskRecord", pilot: "Pilot") -> int:
+    """Input bytes NOT resident on ``pilot`` — what a placement there
+    would move across pilots (0 for tasks without a byte stamp)."""
+    ab = getattr(task, "affinity_bytes", None) or {}
+    name = pilot.desc.name
+    return sum(v for k, v in ab.items()
+               if k != pilot.uid and not (name and k == name))
 
 
 class LocalityAware(PlacementPolicy):
@@ -307,6 +330,10 @@ class CostModelPolicy(PlacementPolicy):
         breaks ties (fewer saved steps = less banked progress).
       * ``pick_victim`` orders steal victims by queued backlog seconds,
         not queued slot counts.
+      * ``place`` additionally prices *data staging*: a candidate pilot
+        not holding the task's inputs pays ``remote_bytes(task, pilot) /
+        bandwidth_bytes_s`` seconds (the DFK's byte-weighted affinity
+        stamps supply the byte map; see docs/dataplane.md).
 
     Predictions fall back per (pilot, kind): the pilot's own kind EWMA ->
     the candidate fleet's kind aggregate -> the pilot's all-kind mixture
@@ -319,6 +346,7 @@ class CostModelPolicy(PlacementPolicy):
 
     def __init__(self, inner: Union[None, str, PlacementPolicy] = None,
                  default_duration_s: float = 1.0,
+                 bandwidth_bytes_s: Optional[float] = 1e9,
                  tie_breaks: Sequence[TieBreak] = ()):
         super().__init__(tie_breaks=tie_breaks)
         self.inner = resolve_policy(inner)
@@ -328,6 +356,14 @@ class CostModelPolicy(PlacementPolicy):
             raise ValueError("default_duration_s must be > 0, "
                              f"got {default_duration_s}")
         self.default_duration_s = default_duration_s
+        # transfer pricing (docs/dataplane.md): placing a task away from
+        # its inputs costs remote_bytes / bandwidth seconds on top of the
+        # compute eta — the data plane's byte stamps make staging cost a
+        # first-class term.  None disables the term.
+        if bandwidth_bytes_s is not None and bandwidth_bytes_s <= 0:
+            raise ValueError("bandwidth_bytes_s must be > 0 or None, "
+                             f"got {bandwidth_bytes_s}")
+        self.bandwidth_bytes_s = bandwidth_bytes_s
 
     # --------------------------- predictions --------------------------- #
     def _fleet_model(self, pilots) -> Tuple[Dict[str, float],
@@ -409,6 +445,10 @@ class CostModelPolicy(PlacementPolicy):
                 # affinity bonus in seconds: the inner weight is load
                 # units, one unit of this task is worth its run time
                 eta -= locality * run * affinity_match(task, p)
+            if self.bandwidth_bytes_s is not None:
+                # staging cost: non-resident input bytes at the modeled
+                # inter-pilot bandwidth
+                eta += remote_bytes(task, p) / self.bandwidth_bytes_s
             key = (eta, *(tb(task, p) for tb in self.tie_breaks))
             if best is None or key < best_key:
                 best, best_key = p, key

@@ -54,6 +54,8 @@ Descs = Union[PilotDescription, Sequence[PilotDescription]]
 class RPEXExecutor(Executor):
     label = "rpex"
     supports_bulk = True
+    resolves_refs = True     # edges may ship ObjectRefs: the executing
+                             # pilot materializes them (docs/dataplane.md)
 
     def __init__(self, pilot_desc: Optional[Descs] = None,
                  pilot: Optional[Pilot] = None,
@@ -62,7 +64,9 @@ class RPEXExecutor(Executor):
                  steal: bool = True,
                  preempt: bool = True,
                  placement: Union[None, str, PlacementPolicy] = None,
-                 heartbeat_timeout_s: Optional[float] = None):
+                 heartbeat_timeout_s: Optional[float] = None,
+                 data_plane: bool = True,
+                 data_threshold: Optional[int] = None):
         # "Once initialized, RPEX ... starts a new RP session and creates
         # the Pilot Manager and the Task Manager."
         policy = resolve_policy(placement)
@@ -77,13 +81,15 @@ class RPEXExecutor(Executor):
             self.pmgr = PilotManager()
             self.pool = self.pmgr.submit_pilots(
                 descs, steal=steal, preempt=preempt, policy=policy,
-                heartbeat_timeout_s=heartbeat_timeout_s)
+                heartbeat_timeout_s=heartbeat_timeout_s,
+                data_plane=data_plane, data_threshold=data_threshold)
         else:
             self.pmgr = None
             self.pool = PilotPool(
                 pilots=list(pilots) if pilots is not None else [pilot],
                 steal=steal, preempt=preempt, policy=policy,
-                heartbeat_timeout_s=heartbeat_timeout_s)
+                heartbeat_timeout_s=heartbeat_timeout_s,
+                data_plane=data_plane, data_threshold=data_threshold)
         self.tmgr = TaskManager(self.pool)
         self.scaler = (PoolScaler(self.pool, scaler).start()
                        if scaler is not None else None)
@@ -100,12 +106,19 @@ class RPEXExecutor(Executor):
         docs/placement.md)."""
         return self.pool.policy
 
+    @property
+    def objectstore(self):
+        """The pool's data plane (None with ``data_plane=False``) — its
+        ``stats()`` expose bytes_moved/spills (docs/dataplane.md)."""
+        return self.pool.objectstore
+
     # ------------------------------------------------------------------ #
     def submit(self, ptask: ParslTask, future: AppFuture):
         task = translate(ptask.fn, ptask.args, ptask.kwargs,
                          ptask.resources, ptask.retries,
                          affinity=ptask.affinity,
-                         retry_policy=ptask.retry_policy)
+                         retry_policy=ptask.retry_policy,
+                         affinity_bytes=ptask.affinity_bytes)
         future.task = task
         self.tmgr.submit(task, done_cb=bind_future(task, future),
                          workflow_key=ptask.key)
@@ -117,7 +130,8 @@ class RPEXExecutor(Executor):
         for pt, fut in pairs:
             task = translate(pt.fn, pt.args, pt.kwargs, pt.resources,
                              pt.retries, affinity=pt.affinity,
-                             retry_policy=pt.retry_policy)
+                             retry_policy=pt.retry_policy,
+                             affinity_bytes=pt.affinity_bytes)
             fut.task = task
             if pt.key is not None:
                 keys[task.uid] = pt.key

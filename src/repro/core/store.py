@@ -60,7 +60,9 @@ from collections import deque
 from pathlib import Path
 from typing import Any, Deque, Dict, List, Optional, Tuple
 
+from . import serializer
 from .futures import TaskRecord, TaskState
+from .objectstore import ObjectRef
 
 _RUN_STATES = ("SCHEDULED", "LAUNCHING", "RUNNING")
 _END_STATES = ("DONE", "FAILED", "CANCELED")
@@ -80,6 +82,10 @@ class StateStore:
                  compact_tail_events: int = 256,
                  dur_alpha: float = 0.2):
         self.journal_path = Path(journal_path) if journal_path else None
+        self.objectstore = None         # pool-wired data plane: DONE
+                                        # records with ObjectRef results
+                                        # journal ref metadata and spill
+                                        # through it (docs/dataplane.md)
         self._lock = threading.Lock()
         self.tasks: Dict[str, dict] = {}
         self.events: List[dict] = []        # unified, append-only stream
@@ -270,12 +276,20 @@ class StateStore:
             # as kind "python" but their run times are a bash population)
             rec["akind"] = task.app_kind
         if task.state == TaskState.DONE:
+            if isinstance(task.result, ObjectRef):
+                # data plane: the line carries the ref *metadata* only;
+                # the writer spills the payload (durable-before-event)
+                # instead of re-serializing a large result through the
+                # json probe — the old double-serialization path
+                rec["result_ref"] = {"oid": task.result.oid,
+                                     "size": task.result.size,
+                                     "kind": task.result.kind}
             # journaled: jsonability is checked by the writer thread (the
             # dumps is the expensive part) which also unpins the result
             # from memory if it cannot be serialized.  Journal-less: no
             # writer will ever strip it, so gate synchronously (PR-2
             # behavior) rather than pin arbitrary result objects forever.
-            if self._fh is not None or _jsonable(task.result):
+            elif self._fh is not None or _jsonable(task.result):
                 rec["result"] = task.result
         if task.error is not None:
             rec["error"] = repr(task.error)[:500]
@@ -325,7 +339,7 @@ class StateStore:
         cur = self._by_key.get(key)
         if (cur is not None and cur.get("uid") != rec.get("uid")
                 and cur.get("state") == TaskState.DONE.value
-                and "result" in cur):
+                and ("result" in cur or "result_ref" in cur)):
             return
         self._by_key[key] = rec
 
@@ -398,13 +412,24 @@ class StateStore:
     # ------------------------------ queries ----------------------------- #
     def completed_result(self, workflow_key: str):
         """(found, result) for a previously-DONE task with this key.
-        O(1): one indexed lookup, no record scan."""
+        O(1): one indexed lookup, no record scan.  A record completed
+        through the data plane carries ``result_ref`` metadata instead of
+        an inline value: the payload re-materializes from the object
+        store's spill (the replay/restart path, docs/dataplane.md)."""
+        ref = None
         with self._lock:
             rec = self._by_key.get(workflow_key)
             if rec is not None and \
-                    rec.get("state") == TaskState.DONE.value and \
-                    "result" in rec:
-                return True, rec["result"]
+                    rec.get("state") == TaskState.DONE.value:
+                if "result" in rec:
+                    return True, rec["result"]
+                ref = rec.get("result_ref")
+        if ref is not None and self.objectstore is not None:
+            try:                        # client-side read: uncounted bytes
+                return True, self.objectstore.get(ref["oid"])
+            except (KeyError, OSError):
+                pass                    # spill lost: treat as not found —
+                                        # the task re-executes
         return False, None
 
     def states(self) -> Dict[str, str]:
@@ -619,6 +644,17 @@ class StateStore:
         lines = []
         slimmed: List[dict] = []
         for rec in batch:
+            ref = rec.get("result_ref")
+            if ref is not None and self.objectstore is not None:
+                # durable-before-event: the payload blob + .ref pointer
+                # must be on disk before the DONE line that names them
+                try:
+                    self.objectstore.ensure_spilled(ref["oid"])
+                except (KeyError, OSError,
+                        serializer.SerializationError):
+                    pass            # unspillable: the metadata still
+                                    # journals; replay just can't
+                                    # re-materialize the payload
             line, dropped = self._dumps(rec)
             lines.append(line)
             if dropped:

@@ -45,7 +45,8 @@ def translate(fn: Callable, args: tuple, kwargs: dict,
               resources: Optional[ResourceSpec] = None,
               max_retries: int = 0,
               affinity: Sequence[str] = (),
-              retry_policy: Optional[RetryPolicy] = None) -> TaskRecord:
+              retry_policy: Optional[RetryPolicy] = None,
+              affinity_bytes: Optional[dict] = None) -> TaskRecord:
     """Capability (ii): 1:1 Parsl-task -> pilot-task translation.
 
     ``affinity`` carries runtime-discovered data-affinity hints (the DFK
@@ -53,6 +54,11 @@ def translate(fn: Callable, args: tuple, kwargs: dict,
     merge — deduplicated, static ResourceSpec hints (input-array device /
     pilot names) first — into the
     ``TaskRecord.affinity`` stamp a LocalityAware placement policy scores.
+
+    ``affinity_bytes`` ({producer pilot: input bytes}, also from the dep
+    manager) upgrades that stamp to *byte-weighted* affinity: placement
+    follows the largest input instead of counting producers equally
+    (docs/dataplane.md).
 
     ``retry_policy`` supersedes the bare ``max_retries`` count when given:
     the attempt budget comes from ``retry_policy.max_retries`` and failed
@@ -83,6 +89,7 @@ def translate(fn: Callable, args: tuple, kwargs: dict,
         app_kind=app_kind,
         sticky=res.sticky,
         affinity=tuple(dict.fromkeys(aff)) if aff else (),
+        affinity_bytes=dict(affinity_bytes) if affinity_bytes else None,
         checkpointable=res.checkpointable,
         inproc_only=(kind == "spmd"),   # a sub-mesh binds to the agent
                                         # process's XLA client: a proc

@@ -29,15 +29,40 @@ Process-mode protocol (FIFO pipe, one in-flight run per worker, per-run
 ``seq`` so a stale message from a previous run can never poison the
 next task on a reused worker):
 
-  parent → child:  ("run", seq, payload, checkpointable, key, snapshot)
+  parent → child:  ("run", seq, payload, checkpointable, key, snapshot,
+                    shm_threshold)
                    ("preempt", seq)            cooperative preempt flag
                    ("save_ack", seq, preempt)  checkpoint persisted
                    ("stop",)
   child → parent:  ("save", seq, step, blob)   body called ckpt.save
                    ("done", seq, blob)         result crossed back
+                   ("done_shm", seq, meta)     large ndarray result in a
+                                               shared-memory segment
                    ("done_raw", seq, info)     result could not cross
                    ("preempted", seq, step)    body unwound at a save
                    ("error", seq, blob)        packed remote exception
+
+Shared-memory fast path (docs/dataplane.md): with ``shm_threshold`` set,
+large C-contiguous ndarray *arguments* are parked in shared-memory
+segments parent-side and cross the pipe as small ``_ShmLeaf`` markers
+the child maps read-only — one memcpy instead of pickle-serialize +
+chunked pipe writes + deserialize.  Frozen arrays (published by the
+object store, which freezes on publish) are parked *once per object* in
+``_SegCache`` and the one segment serves every consumer; mutable arrays
+park one-shot per run.  Large ndarray *results* come back the same way:
+the child writes the array into a segment named ``{prefix}r{pid}_{seq}``
+and ships only the metadata.  Ownership is strict so nothing leaks: the
+parent unlinks one-shot argument segments when the run reaches a
+terminal state (the child is done reading by then), cached segments when
+their array dies (weakref) or at shutdown, and result segments after
+copying out — or, when a worker dies mid-run (SIGKILL, OOM), via
+``_discard``'s reap of ``/dev/shm/{prefix}r{pid}_*``.  Workers use raw
+``shm_open`` + ``mmap`` (``_RawSeg``) on both sides of their boundary:
+the stdlib wrapper registers every attach/create with a
+``resource_tracker``, and a forked child that first touches shm
+post-fork starts its *own* tracker, which then warns at worker exit
+about segments the parent rightly unlinked — so children simply never
+register anything.
 
 Checkpoint proxying keeps the inproc persist-then-raise contract across
 the boundary: the child's ``ckpt.save`` *blocks* until the parent has
@@ -59,16 +84,209 @@ back to in-process execution rather than failing the task.
 """
 from __future__ import annotations
 
+import glob
+import itertools
+import mmap
 import multiprocessing
+import os
 import queue
 import threading
 import warnings
+import weakref
 from typing import Callable, Optional
+
+try:                                     # CPython's posix shm primitive —
+    import _posixshmem                   # lets the forked child map
+except ImportError:                      # segments without the stdlib
+    _posixshmem = None                   # wrapper's resource tracker
 
 from . import serializer
 from .checkpoint import TaskPreempted
 
+try:
+    import numpy as _np
+except ImportError:                      # pragma: no cover - numpy is a
+    _np = None                           # hard dep everywhere else
+
 _SENTINEL = object()
+
+# --------------------------- shared memory -------------------------------- #
+_SHM_PREFIX = "rpxshm"                   # /dev/shm/rpxshm* is ours to reap
+_shm_counter = itertools.count()
+
+
+class _ShmLeaf:
+    """Pipe-crossing marker for an ndarray parked in a shared-memory
+    segment: (segment name, shape, dtype str).  Pickles tiny."""
+
+    __slots__ = ("name", "shape", "dtype")
+
+    def __init__(self, name, shape, dtype):
+        self.name, self.shape, self.dtype = name, shape, dtype
+
+    def __getstate__(self):
+        return (self.name, self.shape, self.dtype)
+
+    def __setstate__(self, s):
+        self.name, self.shape, self.dtype = s
+
+
+def _shm_eligible(v, threshold: int) -> bool:
+    return (_np is not None and isinstance(v, _np.ndarray)
+            and not v.dtype.hasobject and v.nbytes >= threshold
+            and v.flags.c_contiguous)
+
+
+def _shm_attach(name: str):
+    """Attach an existing segment.  Attach *registers* with the resource
+    tracker on 3.8–3.12 (bpo-39959), but every worker is a child of the
+    pilot process and children inherit the parent's tracker, so the
+    registration lands in the same per-name set the creator's did — a
+    no-op — and the eventual ``unlink`` unregisters it exactly once."""
+    from multiprocessing import shared_memory
+    return shared_memory.SharedMemory(name=name)
+
+
+def _shm_park(arr, name: Optional[str] = None):
+    """Copy an ndarray into a fresh segment; returns (leaf, segment)."""
+    from multiprocessing import shared_memory
+    if name is None:
+        name = f"{_SHM_PREFIX}a{os.getpid()}_{next(_shm_counter)}"
+    seg = shared_memory.SharedMemory(create=True, size=arr.nbytes, name=name)
+    _np.ndarray(arr.shape, dtype=arr.dtype, buffer=seg.buf)[...] = arr
+    return _ShmLeaf(seg.name, arr.shape, str(arr.dtype)), seg
+
+
+class _RawSeg:
+    """Child-side segment handle: raw ``shm_open`` + ``mmap``, no
+    ``multiprocessing.shared_memory``.  A forked worker that first
+    touches shm *after* the fork would otherwise start its own resource
+    tracker, which then warns at worker exit about every segment the
+    parent (rightly) unlinked.  Children therefore never register
+    anything; the parent remains the sole tracker client."""
+
+    __slots__ = ("name", "mm")
+
+    def __init__(self, name, mm):
+        self.name, self.mm = name, mm
+
+    @property
+    def buf(self):
+        return self.mm
+
+    def close(self):
+        try:
+            self.mm.close()
+        except (BufferError, OSError):
+            pass                        # a live view pins the map; the
+                                        # array's GC drops it
+
+    def unlink(self):
+        _posixshmem.shm_unlink("/" + self.name)
+
+
+def _shm_attach_child(name: str):
+    """Read-only attach from a worker process, tracker-free."""
+    if _posixshmem is None:             # pragma: no cover - linux has it
+        return _shm_attach(name)
+    fd = _posixshmem.shm_open("/" + name, os.O_RDONLY, mode=0)
+    try:
+        size = os.fstat(fd).st_size
+        mm = mmap.mmap(fd, size, prot=mmap.PROT_READ)
+    finally:
+        os.close(fd)
+    return _RawSeg(name, mm)
+
+
+def _shm_park_child(arr, name: str):
+    """Create + fill a segment from a worker process, tracker-free; the
+    parent owns the unlink (or ``_shm_reap`` does, if we die first)."""
+    if _posixshmem is None:             # pragma: no cover - linux has it
+        return _shm_park(arr, name=name)
+    fd = _posixshmem.shm_open("/" + name,
+                              os.O_RDWR | os.O_CREAT | os.O_EXCL,
+                              mode=0o600)
+    try:
+        os.ftruncate(fd, arr.nbytes)
+        mm = mmap.mmap(fd, arr.nbytes)
+    finally:
+        os.close(fd)
+    _np.ndarray(arr.shape, dtype=arr.dtype, buffer=mm)[...] = arr
+    return _ShmLeaf(name, arr.shape, str(arr.dtype)), _RawSeg(name, mm)
+
+
+class _SegCache:
+    """Park-once reuse for *frozen* argument arrays.
+
+    The object store freezes every ndarray it publishes
+    (``writeable=False``) and same-pilot ``materialize`` hands each
+    consumer the very same object, so a fan-out of N proc-mode consumers
+    would otherwise pay N identical park copies (a 4 MB park is ~6 ms of
+    zero-fill page faults — costlier than the pickle it replaces).  Keyed
+    on ``id()`` with a weakref guard: when the array dies (object-store
+    GC dropping the value), the callback unlinks the segment.  Mutable
+    arrays never enter the cache — they take the one-shot park path."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._entries: dict = {}        # id(arr) -> (leaf, seg, wref)
+
+    def park(self, arr) -> _ShmLeaf:
+        key = id(arr)
+        with self._lock:
+            hit = self._entries.get(key)
+            if hit is not None and hit[2]() is arr:
+                return hit[0]
+            leaf, seg = _shm_park(arr)
+
+            def _evict(_wr, seg=seg):
+                _shm_release([seg])     # no lock: may fire mid-GC on any
+                                        # thread; the dict slot is swept
+                                        # lazily below
+            self._entries[key] = (leaf, seg, weakref.ref(arr, _evict))
+            if len(self._entries) > 64:
+                for k, (_, _, wr) in list(self._entries.items()):
+                    if wr() is None:
+                        self._entries.pop(k, None)
+            return leaf
+
+    def close(self):
+        with self._lock:
+            entries, self._entries = self._entries, {}
+        for _, seg, wr in entries.values():
+            if wr() is not None:        # dead entries already unlinked
+                _shm_release([seg])     # by their weakref callback
+
+
+def _shm_substitute(args: tuple, kwargs: dict, threshold: int,
+                    cache: Optional[_SegCache] = None):
+    """Replace top-level large ndarray args/kwarg values with _ShmLeaf
+    markers.  Returns (args, kwargs, created segments) — the caller owns
+    the one-shot segments and unlinks them once the run is terminal;
+    cache-parked segments (frozen arrays) are owned by the cache."""
+    segs = []
+
+    def swap(v):
+        if _shm_eligible(v, threshold):
+            if cache is not None and not v.flags.writeable:
+                return cache.park(v)
+            leaf, seg = _shm_park(v)
+            segs.append(seg)
+            return leaf
+        return v
+
+    new_args = tuple(swap(v) for v in args)
+    new_kwargs = {k: swap(v) for k, v in kwargs.items()}
+    return new_args, new_kwargs, segs
+
+
+def _shm_release(segs):
+    for seg in segs:
+        try:
+            seg.close()
+            seg.unlink()
+        except (FileNotFoundError, OSError):
+            pass
 
 
 class WorkerDied(RuntimeError):
@@ -206,12 +424,18 @@ class ProcessTransport(_PoolBase):
     name = "proc"
 
     def __init__(self, max_workers: int = 32, idle_s: float = 30.0,
-                 start_method: Optional[str] = None):
+                 start_method: Optional[str] = None,
+                 shm_threshold: Optional[int] = None):
         super().__init__(max_workers, idle_s)
+        self.shm_threshold = shm_threshold   # ndarray args/results at or
+                                             # above this cross via shared
+                                             # memory; None = pickle pipe
         # fork is the cheap default on linux (the child never touches the
         # parent's XLA runtime: the serializer host-transfers jax leaves
         # before they cross); spawn is the conservative opt-in
         self._mp = multiprocessing.get_context(start_method or "fork")
+        self._seg_cache = _SegCache()   # park-once for frozen (published)
+                                        # argument arrays
         self._pcond = threading.Condition()
         self._free: list = []           # idle workers (LIFO: warm reuse)
         self._all: set = set()          # every live worker (shutdown sweep)
@@ -226,24 +450,40 @@ class ProcessTransport(_PoolBase):
         kwargs = dict(task.kwargs)
         kwargs.pop("_jit", None)        # spmd-only knob; meaningless here
         kwargs.pop("ckpt", None)        # the child injects its own proxy
+        args = task.args
+        segs = []
+        if self.shm_threshold is not None:
+            # park large ndarray inputs in shared memory: the child
+            # re-attaches read-only, so only tiny markers cross the pipe
+            args, kwargs, segs = _shm_substitute(args, kwargs,
+                                                 self.shm_threshold,
+                                                 cache=self._seg_cache)
         try:
-            payload = serializer.pack_task(task.fn, task.args, kwargs)
-        except serializer.SerializationError:
-            # body cannot ship — degrade to in-process execution instead
-            # of failing the task (same spirit as the result-side
-            # degradation: correctness first, parallelism best-effort)
-            return self.executor.execute(task)
-        w = self._checkout()
-        try:
-            result = self._drive(w, task, payload)
-        except WorkerDied:
-            self._discard(w)
-            raise                       # agent's fault path: FAIL + retry
-        except BaseException:           # noqa: BLE001 — remote error or
-            self._checkin(w)            # TaskPreempted: worker is healthy
-            raise
-        self._checkin(w)
-        return result
+            try:
+                payload = serializer.pack_task(task.fn, args, kwargs)
+            except serializer.SerializationError:
+                # body cannot ship — degrade to in-process execution
+                # instead of failing the task (same spirit as the
+                # result-side degradation: correctness first,
+                # parallelism best-effort)
+                return self.executor.execute(task)
+            w = self._checkout()
+            try:
+                result = self._drive(w, task, payload)
+            except WorkerDied:
+                self._discard(w)
+                raise                   # agent's fault path: FAIL + retry
+            except BaseException:       # noqa: BLE001 — remote error or
+                self._checkin(w)        # TaskPreempted: worker is healthy
+                raise
+            self._checkin(w)
+            return result
+        finally:
+            # the run is terminal (or never started): the child is done
+            # reading, so the argument segments can go.  Parent-side
+            # unlink is what makes arg segments leak-proof no matter how
+            # the child dies.
+            _shm_release(segs)
 
     def _drive(self, w: _ProcWorker, task, payload: bytes):
         """Run one task on one worker: send the run request, then pump
@@ -260,7 +500,8 @@ class ProcessTransport(_PoolBase):
                     snapshot = (got[0], serializer.dumps(got[1]))
                 except serializer.SerializationError:
                     snapshot = None     # unshippable state: fresh start
-        self._send(w, ("run", seq, payload, ctx is not None, key, snapshot))
+        self._send(w, ("run", seq, payload, ctx is not None, key, snapshot,
+                       self.shm_threshold))
         if ctx is not None:
             def _fwd():
                 try:
@@ -297,6 +538,14 @@ class ProcessTransport(_PoolBase):
                     self._send(w, ("save_ack", seq, pre))
                 elif tag == "done":
                     return serializer.loads(msg[2])
+                elif tag == "done_shm":
+                    name, shape, dtype = msg[2]
+                    seg = _shm_attach(name)
+                    try:
+                        return _np.ndarray(shape, dtype=dtype,
+                                           buffer=seg.buf).copy()
+                    finally:
+                        _shm_release([seg])
                 elif tag == "done_raw":
                     return serializer.UnserializableResult(*msg[2])
                 elif tag == "preempted":
@@ -356,6 +605,24 @@ class ProcessTransport(_PoolBase):
             self._total -= 1
             self._pcond.notify()
         self._close(w)
+        self._shm_reap(w.proc.pid)
+
+    @staticmethod
+    def _shm_reap(pid: Optional[int]):
+        """Unlink any result segments a dead worker left behind: a child
+        SIGKILLed between creating ``{prefix}r{pid}_{seq}`` and the
+        parent's copy-out is the only leak window, and the deterministic
+        name closes it."""
+        if pid is None or not os.path.isdir("/dev/shm"):
+            return
+        for path in glob.glob(f"/dev/shm/{_SHM_PREFIX}r{pid}_*"):
+            try:
+                # attach + unlink (not a bare os.unlink) so the shared
+                # resource tracker's registration is retired with the
+                # segment — no "leaked shared_memory" noise at exit
+                _shm_release([_shm_attach(os.path.basename(path))])
+            except OSError:
+                pass
 
     def _spawn(self) -> _ProcWorker:
         parent, child = self._mp.Pipe(duplex=True)
@@ -414,6 +681,8 @@ class ProcessTransport(_PoolBase):
         for w in workers:
             w.proc.join(timeout=1.0)
             self._close(w)
+            self._shm_reap(w.proc.pid)
+        self._seg_cache.close()
 
 
 # ----------------------------- child side -------------------------------- #
@@ -468,20 +737,23 @@ def _proc_worker_main(conn):
             return
         if msg[0] != "run":
             continue                    # stale preempt from a finished run
-        _, seq, payload, checkpointable, key, snapshot = msg
+        _, seq, payload, checkpointable, key, snapshot, shm_thresh = msg
+        attached = []
         try:
             fn, args, kwargs = serializer.loads(payload)
+            args, kwargs = _shm_rehydrate(args, kwargs, attached)
             if checkpointable:
                 snap = None
                 if snapshot is not None:
                     snap = (snapshot[0], serializer.loads(snapshot[1]))
                 kwargs["ckpt"] = _RemoteCheckpoint(conn, key, seq, snap)
             result = fn(*args, **kwargs)
-            blob, degraded = serializer.pack_result(result)
-            if blob is None:
-                conn.send(("done_raw", seq, degraded))
-            else:
-                conn.send(("done", seq, blob))
+            if not _shm_ship_result(conn, seq, result, shm_thresh):
+                blob, degraded = serializer.pack_result(result)
+                if blob is None:
+                    conn.send(("done_raw", seq, degraded))
+                else:
+                    conn.send(("done", seq, blob))
         except TaskPreempted as e:
             conn.send(("preempted", seq, e.step))
         except KeyboardInterrupt:
@@ -491,6 +763,51 @@ def _proc_worker_main(conn):
                 conn.send(("error", seq, serializer.pack_exception(e)))
             except (OSError, ValueError):
                 return                  # parent is gone
+        finally:
+            for seg in attached:        # close our mapping of the
+                try:                    # parent's argument segments —
+                    seg.close()         # the parent unlinks them
+                except OSError:
+                    pass
+
+
+def _shm_rehydrate(args, kwargs, attached):
+    """Child-side inverse of ``_shm_substitute``: attach each _ShmLeaf's
+    segment and hand the body a *read-only* zero-copy view (the buffer is
+    owned by the parent; a body that wants to mutate copies first)."""
+    def hydrate(v):
+        if isinstance(v, _ShmLeaf):
+            seg = _shm_attach_child(v.name)
+            attached.append(seg)
+            arr = _np.ndarray(v.shape, dtype=v.dtype, buffer=seg.buf)
+            if arr.flags.writeable:     # PROT_READ maps arrive read-only
+                arr.flags.writeable = False
+            return arr
+        return v
+
+    return (tuple(hydrate(v) for v in args),
+            {k: hydrate(v) for k, v in kwargs.items()})
+
+
+def _shm_ship_result(conn, seq, result, threshold) -> bool:
+    """Ship a large ndarray result through shared memory: one memcpy into
+    a segment named for (pid, seq) — so the parent can reap it if we die
+    before it copies out — and a tiny metadata message.  Returns False
+    when the result should take the pickle path instead."""
+    if threshold is None or not _shm_eligible(result, threshold):
+        return False
+    try:
+        leaf, seg = _shm_park_child(
+            result, name=f"{_SHM_PREFIX}r{os.getpid()}_{seq}")
+    except OSError:
+        return False                    # /dev/shm full or absent: pickle
+    try:
+        conn.send(("done_shm", seq, (leaf.name, leaf.shape, leaf.dtype)))
+    except BaseException:               # noqa: BLE001 — parent gone: no
+        _shm_release([seg])             # one will ever unlink it but us
+        raise
+    seg.close()                         # ownership moved to the parent,
+    return True                         # which unlinks after copy-out
 
 
 # ------------------------------- factory ---------------------------------- #
@@ -499,11 +816,13 @@ TRANSPORTS = ("inproc", "proc")
 
 def make_transport(name: Optional[str], max_workers: int = 32,
                    idle_s: float = 30.0,
-                   start_method: Optional[str] = None):
+                   start_method: Optional[str] = None,
+                   shm_threshold: Optional[int] = None):
     """Build a transport from a PilotDescription's knobs."""
     if name in (None, "inproc"):
         return InprocTransport(max_workers, idle_s)
     if name == "proc":
-        return ProcessTransport(max_workers, idle_s, start_method)
+        return ProcessTransport(max_workers, idle_s, start_method,
+                                shm_threshold=shm_threshold)
     raise ValueError(
         f"unknown transport {name!r}; expected one of {TRANSPORTS}")

@@ -21,12 +21,13 @@ import signal
 import threading
 import time
 
+import numpy as np
 import pytest
 
-from repro.core import (FaultInjector, Pilot, PilotDescription, PilotPool,
-                        PilotLost, ResourceSpec, RetryPolicy, RPEXExecutor,
-                        SlotFailure, TaskManager, TaskState, WorkerDied,
-                        python_app, translate)
+from repro.core import (FaultInjector, ObjectRef, Pilot, PilotDescription,
+                        PilotPool, PilotLost, ResourceSpec, RetryPolicy,
+                        RPEXExecutor, SlotFailure, TaskManager, TaskState,
+                        WorkerDied, python_app, translate)
 
 
 # ----------------------------- RetryPolicy ------------------------------ #
@@ -295,6 +296,43 @@ def test_mark_lost_recovers_queued_and_running_work():
         moved = [e for e in evs if e["event"] == "STOLEN"
                  and e.get("reason") == "pilot-lost"]
         assert {e["uid"] for e in moved} >= {t.uid for t in queued}
+    finally:
+        pool.close()
+
+
+@pytest.mark.timeout(120)
+def test_pilot_loss_rehosts_live_objects():
+    """A lost pilot's published results move to a survivor: existing refs
+    keep resolving without a cross-pilot charge against the dead owner,
+    and the hand-off is journaled (docs/dataplane.md)."""
+    pool = PilotPool([PilotDescription(n_slots=2, name="oa"),
+                      PilotDescription(n_slots=2, name="ob")], steal=False)
+    tmgr = TaskManager(pool)
+    try:
+        a, b = pool.pilots
+        t = translate(lambda: np.ones(32_768, dtype=np.float64), (), {})
+        tmgr._bind(t, pilot=a)
+        with tmgr._cv:
+            tmgr._outstanding += 1
+        t.transition(TaskState.TRANSLATED, a.store)
+        done = threading.Event()
+        a.agent.submit(t, done_cb=lambda _t: done.set())
+        assert done.wait(30)
+        ref = t.result
+        assert isinstance(ref, ObjectRef) and ref.pilot_uid == a.uid
+
+        assert pool.mark_lost(a, reason="test")
+        e = pool.objectstore.entry(ref.oid)
+        assert e.owner == b.uid
+        assert pool.objectstore.stats()["rehosted"] >= 1
+        got = ref.deref(pilot_uid=b.uid)
+        assert float(got.sum()) == 32_768.0
+        # re-homed: the survivor's read is local, not a transfer
+        assert pool.objectstore.stats()["bytes_moved"] == 0
+        evs = pool.events()
+        re_ev = [ev for ev in evs if ev["event"] == "OBJECTS_REHOSTED"]
+        assert re_ev and re_ev[0]["src"] == a.uid
+        assert re_ev[0]["objects"] >= 1
     finally:
         pool.close()
 
