@@ -33,9 +33,9 @@ import threading
 import time
 from pathlib import Path
 
-from repro.core import (FaultInjector, PilotDescription, PilotPool,
-                        PoolScaler, ResourceSpec, RetryPolicy, ScalerConfig,
-                        TaskManager, TaskState, translate)
+from repro.core import (EVENTS, FaultInjector, PilotDescription,
+                        PilotPool, PoolScaler, ResourceSpec, RetryPolicy,
+                        ScalerConfig, TaskManager, TaskState, translate)
 
 
 def _ckpt_body(n, step_s, ckpt=None):
@@ -128,11 +128,11 @@ def run_workload(chaos: bool, n_tasks: int, task_ms: float, ckpt_tasks: int,
             "unique": len(set(uids)),
             "done": sum(1 for s in states if s == TaskState.DONE),
             "pilot_lost": sum(1 for e in evs
-                              if e["event"] == "PILOT_LOST"),
+                              if e["event"] == EVENTS.PILOT_LOST),
             "stolen_pilot_lost": sum(1 for e in evs
-                                     if e["event"] == "STOLEN"
+                                     if e["event"] == EVENTS.STOLEN
                                      and e.get("reason") == "pilot-lost"),
-            "stolen_retry": sum(1 for e in evs if e["event"] == "STOLEN"
+            "stolen_retry": sum(1 for e in evs if e["event"] == EVENTS.STOLEN
                                 and e.get("reason") == "retry"),
             "replaced": sum(1 for d in scaler.decisions
                             if d["action"] == "replace_lost"),

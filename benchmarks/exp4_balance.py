@@ -25,8 +25,8 @@ import json
 import time
 from pathlib import Path
 
-from repro.core import (PilotDescription, RPEXExecutor, ScalerConfig,
-                        translate)
+from repro.core import (EVENTS, PilotDescription, RPEXExecutor,
+                        ScalerConfig, translate)
 
 
 def _sleeper(dur):
@@ -54,7 +54,7 @@ def run_balance(n_tasks: int, long_s: float, short_s: float,
         makespan = time.monotonic() - t0
         assert ok, "workload timed out"
         events = rpex.pool.events()
-        stolen = sum(1 for e in events if e["event"] == "STOLEN")
+        stolen = sum(1 for e in events if e["event"] == EVENTS.STOLEN)
         per_pilot = {}
         for t in tasks:
             per_pilot[t.pilot_uid] = per_pilot.get(t.pilot_uid, 0) + 1
@@ -80,18 +80,19 @@ def run_autoscale(n_tasks: int, task_s: float) -> dict:
         deadline = time.monotonic() + 10.0
         while time.monotonic() < deadline:      # wait out the idle retire
             kinds = {e["event"] for e in rpex.pool.events()}
-            if "PILOT_RETIRE" in kinds:
+            if EVENTS.PILOT_RETIRE in kinds:
                 break
             time.sleep(0.05)
         events = rpex.pool.events()
         kinds = {e["event"] for e in events}
-        cycle_ok = {"PILOT_START", "STOLEN", "PILOT_RETIRE"} <= kinds
+        cycle_ok = {EVENTS.PILOT_START, EVENTS.STOLEN,
+                    EVENTS.PILOT_RETIRE} <= kinds
         return {"makespan_s": makespan, "cycle_ok": cycle_ok,
                 "n_spawned": sum(1 for d in rpex.scaler.decisions
                                  if d["action"] == "scale_up"),
                 "n_retired": sum(1 for d in rpex.scaler.decisions
                                  if d["action"] == "retire"),
-                "stolen": sum(1 for e in events if e["event"] == "STOLEN"),
+                "stolen": sum(1 for e in events if e["event"] == EVENTS.STOLEN),
                 "utilization_keys": len(rpex.utilization())}
     finally:
         rpex.shutdown()

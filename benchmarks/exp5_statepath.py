@@ -32,8 +32,8 @@ import threading
 import time
 from pathlib import Path
 
-from repro.core import (DataFlowKernel, PilotDescription, RPEXExecutor,
-                        TaskRecord, TaskState)
+from repro.core import (EVENTS, DataFlowKernel, PilotDescription,
+                        RPEXExecutor, TaskRecord, TaskState)
 from repro.core.dfk import _find_futures, _resolve
 from repro.core.executors import ParslTask
 
@@ -69,7 +69,8 @@ class SyncStateStore:
                "slot_ids": list(task.slot_ids), "t": time.time()}
         if task.state == TaskState.DONE and _jsonable(task.result):
             rec["result"] = task.result
-        ev = {"event": "STATE", "uid": task.uid, "state": task.state.value,
+        ev = {"event": EVENTS.STATE, "uid": task.uid,
+              "state": task.state.value,
               "t": time.monotonic(), "slots": len(task.slot_ids) or 1}
         with self._lock:
             prev = self.tasks.get(task.uid, {})

@@ -38,8 +38,8 @@ from pathlib import Path
 
 import numpy as np
 
-from repro.core import (DataFlowKernel, PilotDescription, RPEXExecutor,
-                        python_app)
+from repro.core import (EVENTS, DataFlowKernel, PilotDescription,
+                        RPEXExecutor, python_app)
 
 
 def run_chains(placement: str, n_chains: int, depth: int,
@@ -83,7 +83,7 @@ def run_chains(placement: str, n_chains: int, depth: int,
                 edges += 1
                 hops += src != dst
         stolen = sum(1 for e in rpex.pool.events()
-                     if e["event"] == "STOLEN")
+                     if e["event"] == EVENTS.STOLEN)
         stats = rpex.objectstore.stats() if rpex.objectstore else {}
         return {"makespan_s": makespan, "hops": hops, "edges": edges,
                 "stolen": stolen, "tasks_per_pilot": per_pilot,

@@ -34,7 +34,7 @@ import threading
 import time
 from pathlib import Path
 
-from repro.core import (PilotDescription, PilotPool, PoolScaler,
+from repro.core import (EVENTS, PilotDescription, PilotPool, PoolScaler,
                         ResourceSpec, ScalerConfig, TaskState, translate)
 
 
@@ -147,7 +147,7 @@ def run_skew(preempt: bool, long_steps: int, step_ms: float,
             time.sleep(0.005)
         makespan = time.monotonic() - t0
         assert lres and len(sres) == n_short, "skew workload timed out"
-        stolen = [e for e in pool.events() if e["event"] == "STOLEN"]
+        stolen = [e for e in pool.events() if e["event"] == EVENTS.STOLEN]
         return {"makespan_s": makespan,
                 "long_final_pilot": ("dev" if lt.pilot_uid == dev.uid
                                      else "gen"),

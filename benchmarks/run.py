@@ -71,6 +71,12 @@ _BENCH_HEADLINES = {
         (("cpu_burn", "proc", "gil_bound"), "proc gil_bound", "{:.2f}"),
         (("config", "cores"), "cores", "{:d}"),
     ],
+    "BENCH_lockorder.json": [
+        (("edge_count",), "lock-order edges", "{:d}"),
+        (("locks",), "locks seen", "{:d}"),
+        (("max_hold_ms_overall",), "max hold ms", "{:.1f}"),
+        (("threads",), "threads", "{:d}"),
+    ],
     "BENCH_resilience.json": [
         (("degradation_ratio",), "chaos degradation", "{:.2f}x"),
         (("chaos", "pilot_lost"), "pilots lost", "{:d}"),

@@ -3,11 +3,22 @@
 # Usage: scripts/ci.sh [extra pytest args...]
 #   CI_COVERAGE=1  — run under `coverage run --source=src/repro`
 #   CI_BENCH=1     — append the throughput benchmark smoke
+#   CI_ANALYSIS=1  — run the concurrency analyzer gate first
+#   CI_ANALYSIS_ONLY=1 — with CI_ANALYSIS=1, stop after the gate
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+# concurrency static analysis (lock discipline, event protocol, state
+# machine) gated against the committed baseline in src/repro/analysis/
+if [[ "${CI_ANALYSIS:-0}" == "1" ]]; then
+    python -m repro.analysis
+    if [[ "${CI_ANALYSIS_ONLY:-0}" == "1" ]]; then
+        exit 0
+    fi
+fi
 
 if [[ "${CI_COVERAGE:-0}" == "1" ]]; then
     coverage run --source=src/repro -m pytest -q "$@"

@@ -28,15 +28,25 @@ from .scheduler import SlotScheduler
 from .spmd_executor import SPMDFunctionExecutor
 from .serializer import (RemoteError, RemoteTraceback, SerializationError,
                          UnserializableResult)
-from .store import StateStore, overhead_from_events, union_intervals
+from .store import EVENTS, StateStore, overhead_from_events, union_intervals
 from .translator import bind_future, detect_kind, translate
 from .transport import (InprocTransport, ProcessTransport, WorkerDied,
                         make_transport)
 
+# Opt-in concurrency watchdog (REPRO_LOCK_WATCHDOG=1): instruments every
+# lock the runtime allocates from here on and validates task-state
+# transitions.  Installed after the submodule imports above so the
+# STATE_MACHINE hook finds futures fully loaded; lock *construction*
+# happens at runtime, so nothing is missed by installing last.
+from ..analysis.watchdog import maybe_install_from_env as _wd_install
+_wd_install()
+del _wd_install
+
 __all__ = [
     "Agent", "AppFuture", "BlobLeaf", "Checkpoint", "CheckpointStore",
     "CostModelPolicy",
-    "DataFlowKernel", "Executor", "FaultInjector", "InprocTransport",
+    "DataFlowKernel", "EVENTS", "Executor", "FaultInjector",
+    "InprocTransport",
     "LeastLoaded",
     "LocalityAware", "ObjectRef", "ObjectStore", "ParslTask", "Pilot",
     "PilotDescription",

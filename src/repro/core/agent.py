@@ -77,7 +77,7 @@ from .futures import (TERMINAL, ResourceSpec, TaskRecord, TaskState,
 from .objectstore import materialize
 from .scheduler import SlotScheduler
 from .spmd_executor import SPMDFunctionExecutor
-from .store import StateStore
+from .store import EVENTS, StateStore
 from .transport import InprocTransport, WorkerDied
 
 _log = logging.getLogger(__name__)
@@ -328,7 +328,7 @@ class Agent:
                     "Agent.shutdown: %d task(s) still outstanding after "
                     "%.1fs drain wait: %s", len(stranded), timeout,
                     ", ".join(stranded))
-                self.store.record_event("SHUTDOWN_STRANDED",
+                self.store.record_event(EVENTS.SHUTDOWN_STRANDED,
                                         count=len(stranded),
                                         uids=stranded[:32])
         with self._cv:
@@ -870,7 +870,7 @@ class Agent:
                 # terminally instead of respawn-storming the proc pool
                 task.quarantined = True
                 self.store.record_event(
-                    "QUARANTINED", uid=task.uid, pilot=task.pilot_uid,
+                    EVENTS.QUARANTINED, uid=task.uid, pilot=task.pilot_uid,
                     worker_deaths=task.worker_deaths,
                     attempts=task.retries + 1,
                     error=repr(err)[:200] if err is not None else None)

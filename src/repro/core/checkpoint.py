@@ -43,7 +43,7 @@ from pathlib import Path
 from typing import Any, Dict, Optional, Tuple
 
 from .objectstore import BlobLeaf
-from .store import StateStore
+from .store import EVENTS, StateStore
 
 try:
     import numpy as _np
@@ -88,7 +88,7 @@ class CheckpointStore:
         # replay: a journaled store has already rebuilt its event stream,
         # including CHECKPOINT events, by the time we attach
         for ev in store.events_snapshot():
-            if ev.get("event") == "CHECKPOINT":
+            if ev.get("event") == EVENTS.CHECKPOINT:
                 self._ingest(ev)
 
     def _ingest(self, ev: dict):
@@ -136,7 +136,7 @@ class CheckpointStore:
             # landed on disk: an unpicklable state is a memory-only
             # checkpoint, and replaying its event would make step()
             # assert a resume that restore() can never deliver
-            self.store.record_event("CHECKPOINT", key=key, step=step,
+            self.store.record_event(EVENTS.CHECKPOINT, key=key, step=step,
                                     path=path)
         return accepted
 
@@ -185,7 +185,7 @@ class CheckpointStore:
         if cur is None:
             return
         self._unlink(cur.get("path"))
-        self.store.record_event("CHECKPOINT", key=key, gc=True)
+        self.store.record_event(EVENTS.CHECKPOINT, key=key, gc=True)
 
     def adopt(self, key: str, src: "CheckpointStore") -> bool:
         """Copy ``src``'s latest checkpoint for ``key`` into this store

@@ -38,6 +38,47 @@ class TaskState(str, Enum):
 
 TERMINAL = {TaskState.DONE, TaskState.FAILED, TaskState.CANCELED}
 
+# The declared task-lifecycle state machine: every legal ``transition()``
+# edge.  The static checker (repro.analysis.events) verifies each
+# ``transition(TaskState.X)`` site targets a reachable state; the runtime
+# watchdog (REPRO_LOCK_WATCHDOG=1) validates actual from->to pairs against
+# it.  Non-obvious edges, all real:
+#   NEW -> NEW              translator stamps the initial state timestamp
+#   NEW -> SCHEDULED        tasks submitted straight to an Agent (no
+#                           translator in the loop) are NEW when placed
+#   NEW -> DONE/FAILED      DFK memoization hit / upstream dep failure
+#   TRANSLATED -> RUNNING   direct (non-pilot) executors skip SCHEDULED
+#   RUNNING -> TRANSLATED   retry requeue before the FAILED stamp landed
+#   FAILED -> TRANSLATED    retry requeue after an in-process body already
+#                           stamped FAILED on the shared record
+#   RUNNING -> SCHEDULED    preempt-and-migrate requeue
+#   DONE -> DONE, FAILED -> FAILED   idempotent re-stamp when the agent
+#                           settles a record the executor already stamped
+STATE_MACHINE = {
+    TaskState.NEW: (TaskState.NEW, TaskState.TRANSLATED,
+                    TaskState.SCHEDULED, TaskState.RUNNING,
+                    TaskState.DONE, TaskState.FAILED,
+                    TaskState.CANCELED),
+    TaskState.TRANSLATED: (TaskState.SCHEDULED, TaskState.RUNNING,
+                           TaskState.DONE, TaskState.FAILED,
+                           TaskState.CANCELED),
+    TaskState.SCHEDULED: (TaskState.LAUNCHING, TaskState.SCHEDULED,
+                          TaskState.TRANSLATED, TaskState.FAILED,
+                          TaskState.CANCELED),
+    TaskState.LAUNCHING: (TaskState.RUNNING, TaskState.FAILED,
+                          TaskState.CANCELED),
+    TaskState.RUNNING: (TaskState.DONE, TaskState.FAILED,
+                        TaskState.CANCELED, TaskState.TRANSLATED,
+                        TaskState.SCHEDULED),
+    TaskState.DONE: (TaskState.DONE,),
+    TaskState.FAILED: (TaskState.FAILED, TaskState.TRANSLATED),
+    TaskState.CANCELED: (),
+}
+
+# Runtime transition validation hook — None (free) unless the lock-order
+# watchdog is installed, which points it at its violation recorder.
+_validate_transition = None
+
 _uid = itertools.count()
 
 
@@ -230,6 +271,8 @@ class TaskRecord:
                                     # bound to this process's XLA client)
 
     def transition(self, state: TaskState, store=None):
+        if _validate_transition is not None:
+            _validate_transition(self.state.value, state.value, self.uid)
         self.state = state
         self.timestamps[state.value] = time.monotonic()
         if store is not None:

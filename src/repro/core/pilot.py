@@ -64,7 +64,7 @@ from .objectstore import ObjectStore
 from .placement import PlacementPolicy, filter_healthy, resolve_policy
 from .scheduler import SlotScheduler
 from .spmd_executor import SPMDFunctionExecutor
-from .store import StateStore
+from .store import EVENTS, StateStore
 from .transport import make_transport
 
 
@@ -131,7 +131,7 @@ class Pilot:
         self.lost = False         # declared LOST by health supervision:
                                   # close() must not wait on its zombies
         self._closed = False
-        self.store.record_event("PILOT_START", pilot=self.uid, n_slots=n,
+        self.store.record_event(EVENTS.PILOT_START, pilot=self.uid, n_slots=n,
                                 kinds=list(desc.kinds or ()) or None,
                                 transport=desc.transport)
 
@@ -173,11 +173,11 @@ class Pilot:
 
     # elastic scaling --------------------------------------------------- #
     def grow(self, n_slots: int):
-        self.store.record_event("GROW", pilot=self.uid, n=n_slots)
+        self.store.record_event(EVENTS.GROW, pilot=self.uid, n=n_slots)
         return self.scheduler.grow(n_slots)
 
     def shrink(self, n_slots: int):
-        self.store.record_event("SHRINK", pilot=self.uid, n=n_slots)
+        self.store.record_event(EVENTS.SHRINK, pilot=self.uid, n=n_slots)
         return self.scheduler.shrink(n_slots)
 
     @property
@@ -242,7 +242,7 @@ class Pilot:
             orphans += preempted
         drained = self.agent.wait_idle(timeout=0)
         self.agent.shutdown(wait=False)
-        self.store.record_event("PILOT_RETIRE", pilot=self.uid,
+        self.store.record_event(EVENTS.PILOT_RETIRE, pilot=self.uid,
                                 drained=drained)
         self.store.close()
         self._closed = True
@@ -463,7 +463,7 @@ class PilotPool:
             # somewhere else (or fail it visibly if nowhere is left)
             self._place_orphan(task, cb, src, reason, _depth + 1)
             return False
-        dst.store.record_event("STOLEN", uid=task.uid, src=src.uid,
+        dst.store.record_event(EVENTS.STOLEN, uid=task.uid, src=src.uid,
                                dst=dst.uid, reason=reason)
         return True
 
@@ -700,7 +700,7 @@ class PilotPool:
         # quietly because abandon_running already CANCELed the records
         queued = pilot.agent.steal()
         abandoned = pilot.agent.abandon_running()
-        pilot.store.record_event("PILOT_LOST", pilot=pilot.uid,
+        pilot.store.record_event(EVENTS.PILOT_LOST, pilot=pilot.uid,
                                  reason=reason, queued=len(queued),
                                  running=len(abandoned))
         for task, cb in queued:
@@ -727,7 +727,7 @@ class PilotPool:
             n = self.objectstore.rehost(departed.uid, survivor.uid)
             if n:
                 survivor.store.record_event(
-                    "OBJECTS_REHOSTED", pilot=survivor.uid,
+                    EVENTS.OBJECTS_REHOSTED, pilot=survivor.uid,
                     src=departed.uid, objects=n)
 
     def _recover_running(self, task: TaskRecord, cb: Optional[Callable],
@@ -1145,7 +1145,7 @@ class TaskManager:
         pilot = pilot if pilot is not None else self.pool.route(task)
         task.pilot_uid = pilot.uid
         self.tasks[task.uid] = task
-        pilot.store.record_event("ROUTED", uid=task.uid, pilot=pilot.uid,
+        pilot.store.record_event(EVENTS.ROUTED, uid=task.uid, pilot=pilot.uid,
                                  kind=task.kind)
         if workflow_key is not None:
             self._wf_keys[task.uid] = workflow_key

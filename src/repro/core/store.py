@@ -67,6 +67,37 @@ from .objectstore import ObjectRef
 _RUN_STATES = ("SCHEDULED", "LAUNCHING", "RUNNING")
 _END_STATES = ("DONE", "FAILED", "CANCELED")
 
+
+class EVENTS:
+    """Central registry of journaled event names — the single source of
+    truth the event-protocol checker (``repro.analysis.events``) holds
+    emitters, replay, compaction, and listeners against.
+
+    Every name written into a journal ``{"event": ...}`` record must be
+    declared here, and every emitter/consumer in ``src/repro/core`` and
+    ``benchmarks`` must reference the registry constant rather than a
+    string literal, so drift (emitted-but-never-replayed, consumed-but-
+    never-emitted, undeclared) is mechanically checkable."""
+
+    STATE = "STATE"                     # task state transition (record())
+    SNAPSHOT = "_SNAPSHOT"              # compaction header line
+    CHECKPOINT = "CHECKPOINT"           # task-checkpoint save/gc marker
+    PILOT_START = "PILOT_START"         # pilot came up
+    PILOT_RETIRE = "PILOT_RETIRE"       # pilot drained + retired
+    PILOT_LOST = "PILOT_LOST"           # heartbeat/crash loss declared
+    GROW = "GROW"                       # elastic resize: slots added
+    SHRINK = "SHRINK"                   # elastic resize: slots removed
+    ROUTED = "ROUTED"                   # pool routing decision
+    STOLEN = "STOLEN"                   # work-stealing / re-route event
+    QUARANTINED = "QUARANTINED"         # poison task terminally failed
+    SHUTDOWN_STRANDED = "SHUTDOWN_STRANDED"   # hung tasks at shutdown
+    OBJECTS_REHOSTED = "OBJECTS_REHOSTED"     # data-plane ownership move
+
+    @classmethod
+    def all_names(cls):
+        return frozenset(v for k, v in vars(cls).items()
+                         if isinstance(v, str) and not k.startswith("_"))
+
 # Replay clock translation: journal stamps are time.monotonic(), whose
 # epoch resets on reboot.  Each line also carries a wall stamp, so replay
 # detects an epoch mismatch (boot offsets differing by more than this many
@@ -166,7 +197,7 @@ class StateStore:
                 except json.JSONDecodeError:
                     continue        # torn tail write from a crash
                 self._journal_lines += 1
-                if rec.get("event") == "_SNAPSHOT":
+                if rec.get("event") == EVENTS.SNAPSHOT:
                     stats = dict(rec.get("stats") or {})
                     snap_off = rec.get("mono_offset")
                     if snap_off is not None \
@@ -205,7 +236,7 @@ class StateStore:
                 if "mt" in rec and not rec.get("snap"):
                     mt = rec["mt"] + self._epoch_delta(rec.get("t"),
                                                        rec["mt"], cur_off)
-                    ev = {"event": "STATE", "uid": rec["uid"],
+                    ev = {"event": EVENTS.STATE, "uid": rec["uid"],
                           "state": rec["state"], "t": mt,
                           "slots": len(rec.get("slot_ids") or ()) or 1,
                           "pilot": rec.get("pilot"),
@@ -301,7 +332,7 @@ class StateStore:
             rec["attempt_errors"] = [repr(e)[:200]
                                      for e in task.attempt_errors]
         ev = {
-            "event": "STATE", "uid": task.uid,
+            "event": EVENTS.STATE, "uid": task.uid,
             "state": task.state.value, "t": rec["mt"],
             "slots": len(task.slot_ids) or 1,
             "pilot": task.pilot_uid,
@@ -709,9 +740,9 @@ class StateStore:
             ckpt_latest: Dict[str, dict] = {}
             for e in self.events:
                 kind = e.get("event")
-                if kind in (None, "STATE", "ROUTED"):
+                if kind in (None, EVENTS.STATE, EVENTS.ROUTED):
                     continue
-                if kind == "CHECKPOINT":
+                if kind == EVENTS.CHECKPOINT:
                     # collapse: a long task journals one CHECKPOINT per
                     # saved step, but only the latest per key is live —
                     # replay would ignore the rest anyway (monotonic
@@ -735,7 +766,7 @@ class StateStore:
             # its monotonic time like any other journaled event.
             mono_off = time.time() - time.monotonic()
             state_evs = [e for e in self.events
-                         if e.get("event") == "STATE"]
+                         if e.get("event") == EVENTS.STATE]
             tail = [dict(e, tail=True, wt=e["t"] + mono_off)
                     for e in state_evs[-self._compact_tail_events:]]
             stats = {"occ": dict(self._occ),
@@ -746,7 +777,7 @@ class StateStore:
         tmp = self.journal_path.with_name(self.journal_path.name
                                           + ".compact.tmp")
         with open(tmp, "w") as out:
-            out.write(json.dumps({"event": "_SNAPSHOT",
+            out.write(json.dumps({"event": EVENTS.SNAPSHOT,
                                   "t": time.monotonic(),
                                   "mono_offset": mono_off,
                                   "stats": stats}) + "\n")
@@ -843,7 +874,7 @@ def overhead_from_events(events: List[dict]) -> float:
     """
     opens: Dict[str, float] = {}            # uid -> t of pending SCHEDULED
     ivals: List[Tuple[float, float]] = []
-    for e in sorted((e for e in events if e.get("event") == "STATE"),
+    for e in sorted((e for e in events if e.get("event") == EVENTS.STATE),
                     key=lambda e: e["t"]):
         uid, state, t = e["uid"], e["state"], e["t"]
         if state == "SCHEDULED":

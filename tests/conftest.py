@@ -6,7 +6,17 @@ cap journal-heavy StateStore tests so a write-behind deadlock fails fast
 with a traceback instead of wedging the whole CI job.  If pytest-timeout
 is installed it takes over (its hook runs instead); on platforms without
 SIGALRM the marker is a no-op.
+
+Lock-order watchdog (``REPRO_LOCK_WATCHDOG=1``): when the env switch is
+set, importing ``repro.core`` installs the instrumented-lock mode (see
+``repro.analysis.watchdog``) and this conftest turns the whole suite
+into a race detector — at session end the merged per-thread acquisition
+graph must be acyclic, no lock may exceed the hold-time ceiling
+(``REPRO_LOCK_HOLD_CEILING_S``, default 2s), and every observed task
+transition must be a declared STATE_MACHINE edge.  Findings fail the
+run; ``REPRO_LOCK_WATCHDOG_OUT`` additionally writes the graph report.
 """
+import os
 import signal
 
 import pytest
@@ -38,3 +48,37 @@ def pytest_runtest_call(item):
     finally:
         signal.alarm(0)
         signal.signal(signal.SIGALRM, old)
+
+
+def pytest_sessionfinish(session, exitstatus):
+    """Fail the run on watchdog findings when instrumented locks are on."""
+    try:
+        from repro.analysis import watchdog
+    except ImportError:
+        return
+    wd = watchdog.active()
+    if wd is None:
+        return
+    ceiling = float(
+        os.environ.get("REPRO_LOCK_HOLD_CEILING_S",
+                       watchdog.DEFAULT_HOLD_CEILING_S))
+    findings = wd.check(hold_ceiling_s=ceiling)
+    out = os.environ.get("REPRO_LOCK_WATCHDOG_OUT")
+    if out:
+        wd.write_report(out)
+    snap = wd.snapshot()
+    reporter = session.config.pluginmanager.get_plugin("terminalreporter")
+    if reporter is not None:
+        reporter.write_line(
+            f"lock watchdog: {snap['locks']} locks, "
+            f"{snap['edge_count']} order edges, "
+            f"{sum(snap['acquisitions'].values())} acquisitions, "
+            f"max hold {snap['max_hold_ms_overall']:.1f} ms")
+    if findings:
+        for f in findings:
+            msg = f"{f.code} {f.message}"
+            if reporter is not None:
+                reporter.write_line(msg, red=True)
+            else:  # pragma: no cover - no terminal plugin
+                print(msg)
+        session.exitstatus = 3
